@@ -1,0 +1,39 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) wrappers vs jnp oracles.
+
+On this CPU container interpret-mode timings measure correctness paths, not
+TPU performance — the roofline for the kernels is in EXPERIMENTS.md §Roofline.
+The oracle timings still give the paper's exact-vs-streaming memory trade.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec
+from repro.kernels.pairwise import pairwise_sq_dists_ref
+
+N, D, C = 4096, 64, 4
+
+
+def run():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(N, D), jnp.float32)
+    y = jnp.asarray(rng.randn(N, C), jnp.float32)
+    sig = jnp.asarray(1.5)
+
+    us = timeit(lambda: pairwise_sq_dists_ref(x[:1024], x[:1024]))
+    emit("kernels/pairwise_ref/1024x1024", us, "jnp oracle")
+
+    p = exact_transition_matrix(x, sig)
+    us_d = timeit(lambda: p @ y)
+    emit(f"kernels/exact_dense_matvec/n={N}", us_d,
+         f"mem={N*N*4/1e6:.0f}MB materialized")
+
+    us_s = timeit(lambda: streaming_exact_matvec(x, y, sig, block=512))
+    emit(f"kernels/exact_streaming_matvec/n={N}", us_s,
+         f"mem={N*512*4/1e6:.0f}MB streaming,ratio={us_s/max(us_d,1):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

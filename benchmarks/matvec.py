@@ -1,0 +1,44 @@
+"""Paper Fig. 2B: transition-matrix matvec time vs N (exact vs kNN vs VDT),
+plus the fused Pallas exact-matvec kernel (beyond paper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.baselines import (build_knn_graph, exact_transition_matrix,
+                                  knn_matvec, streaming_exact_matvec)
+from repro.core.sigma import sigma_init
+from repro.core.vdt import VariationalDualTree
+from repro.data.synthetic import secstr_like
+
+SIZES = (1000, 4000, 16000)
+C = 2
+
+
+def run():
+    data = secstr_like(n=max(SIZES), d=315)
+    for n in SIZES:
+        x = jnp.asarray(data.x[:n])
+        y = jnp.asarray(data.x[:n, :C]).astype(jnp.float32)
+        sig = sigma_init(x)
+
+        vdt = VariationalDualTree.fit(x, sigma=float(sig), learn_sigma=False)
+        us = timeit(vdt.matvec, y)
+        emit(f"fig2b/matvec/vdt/n={n}", us, f"blocks={vdt.n_blocks}")
+
+        g = build_knn_graph(x, 2, sig)
+        us = timeit(lambda yy: knn_matvec(g, yy), y)
+        emit(f"fig2b/matvec/knn2/n={n}", us, "")
+
+        if n <= 4000:
+            p = exact_transition_matrix(x, sig)
+            us = timeit(lambda yy: p @ yy, y)
+            emit(f"fig2b/matvec/exact/n={n}", us, "")
+
+        us = timeit(lambda yy: streaming_exact_matvec(x, yy, sig), y)
+        emit(f"fig2b/matvec/exact_streaming/n={n}", us,
+             "fused flash form, O(N*blk) mem")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline summary: reads the dry-run artifacts and emits the per-cell
+terms as CSV (and a markdown table to artifacts/roofline.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run():
+    rows = []
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok" or "roofline" not in r:
+            if r.get("status") == "skipped":
+                emit(f"roofline/{r['cell']}", 0.0, "skipped-by-design")
+            continue
+        rl = r["roofline"]
+        if not rl.get("flops"):
+            # multi-pod cells are compile-proof only (no unrolled cost twin)
+            emit(f"roofline/{r['cell']}", 0.0,
+                 f"compile-proof,collGB={r['collectives']['total']/1e9:.2f}")
+            continue
+        emit(f"roofline/{r['cell']}", rl["step_time_s"] * 1e6,
+             (f"bottleneck={rl['bottleneck']},mfu={rl['mfu_at_roofline']:.4f},"
+              f"useful={rl['useful_flops_frac']:.3f}"))
+        rows.append((r["cell"], rl))
+
+    md = ["| cell | t_compute (s) | t_memory (s) | t_collective (s) | "
+          "bottleneck | MFU@roofline | useful FLOPs |",
+          "|---|---|---|---|---|---|---|"]
+    for cell, rl in rows:
+        md.append(
+            f"| {cell} | {rl['t_compute_s']:.4g} | {rl['t_memory_s']:.4g} | "
+            f"{rl['t_collective_s']:.4g} | {rl['bottleneck']} | "
+            f"{rl['mfu_at_roofline']:.2%} | {rl['useful_flops_frac']:.2f} |")
+    out = ART.parent / "roofline.md"
+    out.write_text("\n".join(md) + "\n")
+
+
+if __name__ == "__main__":
+    run()

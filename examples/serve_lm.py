@@ -1,0 +1,73 @@
+"""Serve a small LM with batched requests: prefill a batch of prompts, then
+decode tokens autoregressively with per-family KV/SSM caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --tokens 32
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models.transformer import init_lm
+from repro.models.whisper import init_encdec
+from repro.serving.decode import decode_step, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    rng = np.random.RandomState(0)
+    init_fn = init_encdec if cfg.family == "audio" else init_lm
+    params = init_fn(cfg, jax.random.PRNGKey(0))
+
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patches"] = jnp.asarray(
+            rng.randn(args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        kwargs["frames"] = jnp.asarray(
+            rng.randn(args.batch, cfg.encoder_frames, cfg.d_model),
+            jnp.float32)
+
+    t0 = time.perf_counter()
+    logits, state = jax.jit(
+        lambda p, t, **kw: prefill(p, t, cfg, **kw))(params, prompts, **kwargs)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch} x {args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.1f} ms")
+
+    step = jax.jit(lambda p, t, s: decode_step(p, t, s, cfg))
+    key = jax.random.PRNGKey(1)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.tokens - 1):
+        logits, state = step(params, tok, state)
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits / args.temperature)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    toks = np.concatenate([np.asarray(t) for t in generated], axis=1)
+    print(f"decode: {args.tokens} tokens x {args.batch} seqs in {dt*1e3:.1f} ms "
+          f"({args.tokens*args.batch/dt:.0f} tok/s, cache={cfg.family})")
+    print("sample token ids:", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

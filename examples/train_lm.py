@@ -1,0 +1,16 @@
+"""Train a ~10M-param LM for a few hundred steps with full fault-tolerance
+machinery (checkpoint every 50 steps, resumable, preemption-safe).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--arch", "smollm-360m", "--smoke",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50",
+        "--lr", "3e-3",
+    ]))

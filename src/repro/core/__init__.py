@@ -1,0 +1,42 @@
+"""Core library: the paper's contribution — variational dual-tree transition
+matrix approximation, O(|B|) random-walk inference, bandwidth learning,
+greedy refinement — plus the exact / kNN baselines it is compared against.
+"""
+from repro.core.baselines import (
+    build_knn_graph,
+    exact_transition_matrix,
+    knn_matvec,
+    streaming_exact_matvec,
+)
+from repro.core.blocks import BlockPartition, coarsest_partition, validate_partition
+from repro.core.label_prop import ccr, label_propagate, one_hot_labels
+from repro.core.matvec import mpt_matvec
+from repro.core.qopt import QState, optimize_q
+from repro.core.refine import refine_to_budget, refinement_gains
+from repro.core.sigma import fit_sigma_q, sigma_init, sigma_star
+from repro.core.tree import PartitionTree, build_tree
+from repro.core.vdt import VariationalDualTree
+
+__all__ = [
+    "BlockPartition",
+    "PartitionTree",
+    "QState",
+    "VariationalDualTree",
+    "build_knn_graph",
+    "build_tree",
+    "ccr",
+    "coarsest_partition",
+    "exact_transition_matrix",
+    "fit_sigma_q",
+    "knn_matvec",
+    "label_propagate",
+    "mpt_matvec",
+    "one_hot_labels",
+    "optimize_q",
+    "refine_to_budget",
+    "refinement_gains",
+    "sigma_init",
+    "sigma_star",
+    "streaming_exact_matvec",
+    "validate_partition",
+]

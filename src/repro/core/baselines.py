@@ -1,0 +1,131 @@
+"""Baselines from the paper's §5.1: the exact model and the kNN graph.
+
+* ``exact``  — dense row-softmax transition matrix (eq. 3, zero diagonal).
+  Also a streaming matvec form that never materializes P (see
+  kernels/fused_lp for the Pallas version; here a blocked jnp fallback).
+* ``knn``    — each point keeps its k nearest neighbours; edge weights from
+  eq. 3 restricted to those k.  TPU adaptation: blocked brute-force
+  distances + top_k on the MXU instead of kd/anchor-tree search.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "exact_transition_matrix",
+    "exact_matvec",
+    "streaming_exact_matvec",
+    "KnnGraph",
+    "build_knn_graph",
+    "knn_matvec",
+]
+
+
+def _sq_dists(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(n, m) pairwise squared distances, MXU-friendly (x@y.T + norms)."""
+    xn = (x * x).sum(-1)
+    yn = (y * y).sum(-1)
+    d2 = xn[:, None] + yn[None, :] - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+@jax.jit
+def exact_transition_matrix(x: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Dense P via eq. 3: row softmax of -d^2/(2 sigma^2), zero diagonal."""
+    n = x.shape[0]
+    logits = -_sq_dists(x, x) / (2.0 * sigma * sigma)
+    logits = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf, logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+@jax.jit
+def exact_matvec(p: jax.Array, y: jax.Array) -> jax.Array:
+    return p @ y
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def streaming_exact_matvec(
+    x: jax.Array, y: jax.Array, sigma: jax.Array, block: int = 1024
+) -> jax.Array:
+    """P @ Y without materializing P: online-softmax over column tiles.
+
+    O(N^2 d) FLOPs, O(N * block) memory.  jnp reference implementation of the
+    fused_lp Pallas kernel (kernels/fused_lp/ref.py re-exports this).
+    """
+    n, d = x.shape
+    c = y.shape[1]
+    nb = -(-n // block)
+    npad = nb * block
+    xp = jnp.pad(x, ((0, npad - n), (0, 0)))
+    yp = jnp.pad(y, ((0, npad - n), (0, 0)))
+    valid = jnp.arange(npad) < n
+    inv = 1.0 / (2.0 * sigma * sigma)
+    xn = (x * x).sum(-1)
+
+    def body(carry, j):
+        m, s, acc = carry  # running max (n,), normalizer (n,), weighted sum (n, c)
+        xb = jax.lax.dynamic_slice_in_dim(xp, j * block, block)
+        yb = jax.lax.dynamic_slice_in_dim(yp, j * block, block)
+        vb = jax.lax.dynamic_slice_in_dim(valid, j * block, block)
+        d2 = xn[:, None] + (xb * xb).sum(-1)[None, :] - 2.0 * (x @ xb.T)
+        logits = -jnp.maximum(d2, 0.0) * inv
+        col = j * block + jnp.arange(block)
+        diag_or_pad = (col[None, :] == jnp.arange(n)[:, None]) | ~vb[None, :]
+        logits = jnp.where(diag_or_pad, -jnp.inf, logits)
+        bm = logits.max(axis=1)
+        new_m = jnp.maximum(m, bm)
+        scale = jnp.exp(m - new_m)
+        p = jnp.exp(logits - new_m[:, None])
+        s = s * scale + p.sum(axis=1)
+        acc = acc * scale[:, None] + p @ yb
+        return (new_m, s, acc), None
+
+    init = (
+        jnp.full((n,), -jnp.inf, x.dtype),
+        jnp.zeros((n,), x.dtype),
+        jnp.zeros((n, c), x.dtype),
+    )
+    (m, s, acc), _ = jax.lax.scan(body, init, jnp.arange(nb))
+    del m, d
+    return acc / jnp.maximum(s, 1e-38)[:, None]
+
+
+class KnnGraph(NamedTuple):
+    indices: jax.Array  # (N, k) neighbour ids
+    weights: jax.Array  # (N, k) row-normalized transition probabilities
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def build_knn_graph(
+    x: jax.Array, k: int, sigma: jax.Array, block: int = 2048
+) -> KnnGraph:
+    """Blocked brute-force kNN + eq. 3 weights restricted to the k edges."""
+    n = x.shape[0]
+    nb = -(-n // block)
+    npad = nb * block
+    xp = jnp.pad(x, ((0, npad - n), (0, 0)))
+
+    def row_block(i):
+        xb = jax.lax.dynamic_slice_in_dim(xp, i * block, block)
+        d2 = _sq_dists(xb, x)  # (block, n)
+        rows = i * block + jnp.arange(block)
+        d2 = jnp.where(rows[:, None] == jnp.arange(n)[None, :], jnp.inf, d2)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return idx, -neg
+
+    idx, d2 = jax.lax.map(row_block, jnp.arange(nb))
+    idx = idx.reshape(npad, k)[:n]
+    d2 = d2.reshape(npad, k)[:n]
+    logits = -d2 / (2.0 * sigma * sigma)
+    w = jax.nn.softmax(logits, axis=-1)
+    return KnnGraph(indices=idx, weights=w)
+
+
+@jax.jit
+def knn_matvec(g: KnnGraph, y: jax.Array) -> jax.Array:
+    """O(kN) sparse matvec: (PY)_i = sum_k w_ik y_{idx_ik}."""
+    return jnp.einsum("nk,nkc->nc", g.weights, y[g.indices])

@@ -1,0 +1,93 @@
+"""Distributed VDT: the paper's random-walk inference at pod scale.
+
+The MPT matvec (Algorithm 1) decomposes into
+
+  CollectUp      — per-level reshape sums over the leaf axis       (local +
+                   log-depth cross-shard reductions, tiny upper levels)
+  block combine  — c_block = q * T[b];  segment-sum by a-node      (gather +
+                   scatter-add; blocks sharded, node table replicated above
+                   the shard level)
+  DistributeDown — prefix accumulation over levels                 (local)
+
+Sharding strategy for the production mesh: leaves and blocks are sharded
+over the *entire* device grid (both ``data`` and ``model`` axes flattened —
+the paper's workload has no tensor dimension to model-shard, so all 256/512
+devices act as data shards).  Upper tree levels are tiny (2^l nodes) and are
+left replicated; GSPMD turns the cross-shard leaf reductions into
+reduce-scatters.
+
+``lp_step_leaforder`` is what the dry-run lowers for the ``paper_vdt`` cell;
+``label_propagate_distributed`` scans it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.matvec import collect_up
+
+__all__ = ["lp_step_leaforder", "label_propagate_distributed",
+           "vdt_input_specs"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("L", "sorted_blocks", "carrier_dtype"))
+def lp_step_leaforder(
+    y_leaf: jax.Array,      # (Np, C) labels in leaf order (ghosts 0)
+    y0_leaf: jax.Array,     # (Np, C) anchor labels
+    a: jax.Array,           # (nb,) block data-node ids
+    b: jax.Array,           # (nb,) block kernel-node ids
+    q: jax.Array,           # (nb,) block transition parameters
+    alpha: float,
+    L: int,
+    sorted_blocks: bool = False,   # §Perf: blocks pre-sorted by a-node
+    carrier_dtype=None,            # §Perf: bf16 carriers halve HBM traffic
+) -> jax.Array:
+    """One Label-Propagation step  y <- alpha Q y + (1 - alpha) y0."""
+    n_nodes = (1 << (L + 1)) - 1
+    dt = carrier_dtype or y_leaf.dtype
+    t = collect_up(y_leaf.astype(dt), L)               # (n_nodes, C)
+    c_block = q.astype(dt)[:, None] * t[b]             # (nb, C) gather
+    c_node = jax.ops.segment_sum(
+        c_block, a, num_segments=n_nodes,
+        indices_are_sorted=sorted_blocks)
+    # distribute down: prefix accumulate root -> leaves
+    acc = c_node[0:1]
+    for lvl in range(L):
+        lo, hi = (1 << (lvl + 1)) - 1, (1 << (lvl + 2)) - 1
+        acc = jnp.repeat(acc, 2, axis=0) + c_node[lo:hi]
+    return (alpha * acc.astype(y_leaf.dtype)
+            + (1.0 - alpha) * y0_leaf)
+
+
+def label_propagate_distributed(y0_leaf, a, b, q, alpha: float, L: int,
+                                n_iters: int):
+    def step(y, _):
+        return lp_step_leaforder(y, y0_leaf, a, b, q, alpha, L), None
+
+    y, _ = jax.lax.scan(step, y0_leaf, None, length=n_iters)
+    return y
+
+
+def vdt_input_specs(n_points: int = 1 << 20, n_classes: int = 16,
+                    blocks_per_point: int = 4):
+    """ShapeDtypeStruct stand-ins for the paper_vdt dry-run cell.
+
+    N = 2^20 leaves, C = 16 label classes, |B| = 4N blocks — the scale of
+    the paper's Table 2 'alpha' experiment (0.5M points, 1M-4M params).
+    """
+    import math
+
+    L = int(math.log2(n_points))
+    nb = blocks_per_point * n_points
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "y_leaf": jax.ShapeDtypeStruct((n_points, n_classes), f32),
+        "y0_leaf": jax.ShapeDtypeStruct((n_points, n_classes), f32),
+        "a": jax.ShapeDtypeStruct((nb,), i32),
+        "b": jax.ShapeDtypeStruct((nb,), i32),
+        "q": jax.ShapeDtypeStruct((nb,), f32),
+    }, {"L": L, "tokens_per_step": n_points}

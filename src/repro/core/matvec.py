@@ -1,0 +1,83 @@
+"""O(|B|) matrix-vector multiplication with the block transition matrix.
+
+Vectorized form of the paper's Algorithm 1 (with the DistributeDown typo
+fixed — see DESIGN.md):
+
+    (QY)_i = sum_{(A,B) in B(x_i)} q_AB * T_B,   T_B = sum_{j in B} y_j
+
+  CollectUp      -> level-major reshape sums produce T for all nodes, O(N C)
+  per-block      -> c_block = q_AB * T[b];  segment-sum into c_node, O(|B| C)
+  DistributeDown -> top-down prefix accumulation over levels, O(N C)
+
+Leaves read their accumulated path sum.  Ghost leaves hold y = 0 so they
+contribute nothing and receive garbage that is never read back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import PartitionTree
+
+__all__ = ["collect_up", "mpt_matvec", "mpt_matvec_leaforder"]
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def collect_up(y_leaf: jax.Array, L: int) -> jax.Array:
+    """Per-node sums T (n_nodes, C) from leaf values (Np, C)."""
+    levels = [y_leaf]
+    cur = y_leaf
+    for _ in range(L):
+        cur = cur.reshape(-1, 2, cur.shape[-1]).sum(axis=1)
+        levels.append(cur)
+    return jnp.concatenate(levels[::-1], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def _distribute_down(c_node: jax.Array, L: int) -> jax.Array:
+    """Top-down prefix accumulation; returns per-leaf path sums (Np, C)."""
+    acc = c_node[0:1]  # root, (1, C)
+    for lvl in range(L):
+        lo, hi = (1 << (lvl + 1)) - 1, (1 << (lvl + 2)) - 1
+        children = c_node[lo:hi]
+        acc = jnp.repeat(acc, 2, axis=0) + children
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def mpt_matvec_leaforder(
+    y_leaf: jax.Array,       # (Np, C) values in leaf order (ghosts 0)
+    a: jax.Array,            # (cap,)
+    b: jax.Array,            # (cap,)
+    q: jax.Array,            # (cap,)  block parameters (0 where inactive)
+    L: int,
+) -> jax.Array:
+    """(QY) in leaf order."""
+    n_nodes = (1 << (L + 1)) - 1
+    t = collect_up(y_leaf, L)                       # (n_nodes, C)
+    c_block = q[:, None] * t[b]                     # (cap, C)
+    c_node = jax.ops.segment_sum(c_block, a, num_segments=n_nodes)
+    return _distribute_down(c_node, L)
+
+
+def mpt_matvec(
+    tree: PartitionTree,
+    a: jax.Array,
+    b: jax.Array,
+    active: jax.Array,
+    log_q: jax.Array,
+    y: jax.Array,            # (N, C) in original row order
+) -> jax.Array:
+    """(QY) in original row order; O(|B| C + N C)."""
+    y = jnp.asarray(y)
+    squeeze = y.ndim == 1
+    if squeeze:
+        y = y[:, None]
+    q = jnp.where(active & jnp.isfinite(log_q), jnp.exp(log_q), 0.0)
+    y_leaf = jnp.zeros((tree.n_leaves, y.shape[1]), dtype=y.dtype)
+    y_leaf = y_leaf.at[tree.slot_of].set(y)
+    out_leaf = mpt_matvec_leaforder(y_leaf, a, b, q, tree.L)
+    out = out_leaf[tree.slot_of]
+    return out[:, 0] if squeeze else out

@@ -1,0 +1,177 @@
+"""O(|B|) variational optimization of the block-constrained transition matrix.
+
+Solves (paper eq. 7 subject to the row-stochasticity constraints eq. 16):
+
+    max_q  -1/(2s^2) sum_B q_AB D2_AB  -  sum_B W_A W_B q_AB log q_AB
+    s.t.   sum_{(A,B) in B(x_i)} W_B q_AB = 1   for every real leaf i
+
+Closed-form recursion (re-derived; equivalent to Thiesson & Kim 2012, Alg. 3):
+
+  within-node softmax:  q_AB = v_A * exp(G_AB) / z_A,
+                        z_A = sum_{B in A_mkd} W_B exp(G_AB),
+                        G_AB = -D2_AB / (2 s^2 W_A W_B)
+  bottom-up:            Zt_leaf = z_leaf
+                        Wbar_A = (W_l log Zt_l + W_r log Zt_r) / W_A
+                        Zt_A   = z_A + exp(Wbar_A)
+  top-down:             R_root = 1;  v_A = R_A z_A / Zt_A;  R_child = R_A - v_A
+  optimum value:        l(D) = c + W_root * log Zt_root,
+                        c = -W log((2 pi s^2)^{d/2} (W - 1))
+
+Everything runs in log space over flat heap arrays; the level sweeps are
+O(log N) dense steps and the block ops are segment reductions — no recursion,
+no pointers.  Blocks are padded to capacity and masked with ``active``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import PartitionTree
+
+__all__ = ["QState", "block_sq_dists", "optimize_q", "lower_bound", "block_log_G"]
+
+_NEG_INF = -jnp.inf
+
+
+class QState(NamedTuple):
+    """Result of one q-optimization."""
+
+    log_q: jax.Array    # (cap,)      log q_AB (−inf where inactive)
+    log_v: jax.Array    # (n_nodes,)  per-node allocated mass (log)
+    log_z: jax.Array    # (n_nodes,)  per-node mark partition function (log)
+    log_zt: jax.Array   # (n_nodes,)  per-node subtree partition function (log)
+    bound: jax.Array    # ()          variational lower bound l(D)
+
+
+def block_sq_dists(tree: PartitionTree, a: jax.Array, b: jax.Array) -> jax.Array:
+    """D2_AB from subtree statistics (paper eq. 9), O(1) per block."""
+    wa, wb = tree.W[a], tree.W[b]
+    d2 = wa * tree.S2[b] + wb * tree.S2[a] - 2.0 * (tree.S1[a] * tree.S1[b]).sum(-1)
+    return jnp.maximum(d2, 0.0)
+
+
+def block_log_G(tree: PartitionTree, a: jax.Array, b: jax.Array,
+                active: jax.Array, sigma: jax.Array) -> jax.Array:
+    """G_AB = -D2/(2 s^2 W_A W_B); −inf on inactive/ghost blocks."""
+    wa, wb = tree.W[a], tree.W[b]
+    ok = active & (wa > 0) & (wb > 0)
+    denom = jnp.where(ok, 2.0 * sigma * sigma * wa * wb, 1.0)
+    g = -block_sq_dists(tree, a, b) / denom
+    return jnp.where(ok, g, _NEG_INF)
+
+
+def _segment_logsumexp(logits: jax.Array, segment_ids: jax.Array,
+                       num_segments: int) -> jax.Array:
+    """Numerically stable segmented logsumexp; −inf for empty segments."""
+    m = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    shifted = jnp.where(jnp.isfinite(logits), jnp.exp(logits - m_safe[segment_ids]), 0.0)
+    s = jax.ops.segment_sum(shifted, segment_ids, num_segments=num_segments)
+    return jnp.where(s > 0, jnp.log(jnp.maximum(s, 1e-38)) + m_safe, _NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def _optimize_impl(W, log_z, sigma, dim, L: int):
+    n_nodes = W.shape[0]
+
+    # ---- bottom-up: log Zt and Wbar --------------------------------------
+    log_zt = log_z
+    wbar = jnp.full((n_nodes,), _NEG_INF, dtype=log_z.dtype)
+    for lvl in range(L - 1, -1, -1):
+        lo, hi = (1 << lvl) - 1, (1 << (lvl + 1)) - 1
+        clo, chi = hi, (1 << (lvl + 2)) - 1
+        zc = jax.lax.dynamic_slice_in_dim(log_zt, clo, chi - clo)
+        wc = jax.lax.dynamic_slice_in_dim(W, clo, chi - clo)
+        zl, zr = zc[0::2], zc[1::2]
+        wl, wr = wc[0::2], wc[1::2]
+        wn = jax.lax.dynamic_slice_in_dim(W, lo, hi - lo)
+        # weighted geometric mean in log space; 0-weight children contribute 0,
+        # a positive-weight child with no marks anywhere below forces −inf
+        # (all its row mass must be consumed at or above this node).
+        num = (jnp.where(wl > 0, wl * zl, 0.0) + jnp.where(wr > 0, wr * zr, 0.0))
+        any_neg_inf = ((wl > 0) & ~jnp.isfinite(zl)) | ((wr > 0) & ~jnp.isfinite(zr))
+        wb_lvl = jnp.where(
+            (wn > 0) & ~any_neg_inf, num / jnp.maximum(wn, 1e-12), _NEG_INF
+        )
+        zn = jax.lax.dynamic_slice_in_dim(log_z, lo, hi - lo)
+        zt_lvl = jnp.logaddexp(zn, wb_lvl)
+        log_zt = jax.lax.dynamic_update_slice_in_dim(log_zt, zt_lvl, lo, axis=0)
+        wbar = jax.lax.dynamic_update_slice_in_dim(wbar, wb_lvl, lo, axis=0)
+
+    # ---- top-down: remaining mass R and per-node mass v ------------------
+    log_r = jnp.full((n_nodes,), _NEG_INF, dtype=log_z.dtype)
+    log_r = log_r.at[0].set(0.0)
+    for lvl in range(0, L):
+        lo, hi = (1 << lvl) - 1, (1 << (lvl + 1)) - 1
+        rn = jax.lax.dynamic_slice_in_dim(log_r, lo, hi - lo)
+        wb_lvl = jax.lax.dynamic_slice_in_dim(wbar, lo, hi - lo)
+        zt_lvl = jax.lax.dynamic_slice_in_dim(log_zt, lo, hi - lo)
+        # log R_child = log R + Wbar − log Zt   (R_child = R · e^Wbar / Zt)
+        rc = jnp.where(jnp.isfinite(rn) & jnp.isfinite(wb_lvl), rn + wb_lvl - zt_lvl,
+                       _NEG_INF)
+        rc2 = jnp.repeat(rc, 2)
+        log_r = jax.lax.dynamic_update_slice_in_dim(log_r, rc2, hi, axis=0)
+
+    log_v = jnp.where(
+        jnp.isfinite(log_r) & jnp.isfinite(log_z), log_r + log_z - log_zt, _NEG_INF
+    )
+
+    # ---- bound ------------------------------------------------------------
+    w_tot = W[0]
+    const = -w_tot * (
+        0.5 * dim * jnp.log(2.0 * jnp.pi * sigma * sigma)
+        + jnp.log(jnp.maximum(w_tot - 1.0, 1.0))
+    )
+    bound = const + w_tot * log_zt[0]
+    return log_v, log_zt, bound
+
+
+def optimize_q(
+    tree: PartitionTree,
+    a: jax.Array,
+    b: jax.Array,
+    active: jax.Array,
+    sigma: jax.Array,
+) -> QState:
+    """Optimal block parameters q for the given partition and bandwidth."""
+    n_nodes = tree.n_nodes
+    log_g = block_log_G(tree, a, b, active, sigma)
+    wb = tree.W[b]
+    contrib = jnp.where(
+        active & (wb > 0), jnp.log(jnp.maximum(wb, 1e-12)) + log_g, _NEG_INF
+    )
+    log_z = _segment_logsumexp(contrib, a, n_nodes)
+    log_v, log_zt, bound = _optimize_impl(tree.W, log_z, sigma,
+                                          jnp.asarray(tree.dim, jnp.float32), tree.L)
+    log_q = jnp.where(
+        jnp.isfinite(log_g) & jnp.isfinite(log_v[a]),
+        log_v[a] + log_g - log_z[a],
+        _NEG_INF,
+    )
+    return QState(log_q=log_q, log_v=log_v, log_z=log_z, log_zt=log_zt, bound=bound)
+
+
+def lower_bound(
+    tree: PartitionTree,
+    a: jax.Array,
+    b: jax.Array,
+    active: jax.Array,
+    log_q: jax.Array,
+    sigma: jax.Array,
+) -> jax.Array:
+    """l(D) (eq. 7) for *arbitrary* feasible q — used by tests/refinement."""
+    wa, wb = tree.W[a], tree.W[b]
+    ok = active & (wa > 0) & (wb > 0) & jnp.isfinite(log_q)
+    q = jnp.where(ok, jnp.exp(log_q), 0.0)
+    d2 = block_sq_dists(tree, a, b)
+    dist_term = -jnp.where(ok, q * d2, 0.0).sum() / (2.0 * sigma * sigma)
+    ent_term = -jnp.where(ok, wa * wb * q * log_q, 0.0).sum()
+    w_tot = tree.W[0]
+    const = -w_tot * (
+        0.5 * tree.dim * jnp.log(2.0 * jnp.pi * sigma * sigma)
+        + jnp.log(jnp.maximum(w_tot - 1.0, 1.0))
+    )
+    return const + dist_term + ent_term

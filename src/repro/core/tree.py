@@ -1,0 +1,197 @@
+"""Balanced binary partition tree in heap layout.
+
+TPU adaptation of the paper's anchor tree (Moore, 2000): instead of a
+pointer-based tree built by triangle-inequality pruning, we build a perfectly
+balanced binary tree by recursive median splits along the locally dominant
+direction.  The tree is stored in *heap layout*:
+
+  - node ids are flat ints; the root is 0, children of node ``k`` are
+    ``2k+1`` and ``2k+2``;
+  - level ``l`` occupies ids ``[2^l - 1, 2^{l+1} - 1)``;
+  - leaves live at level ``L`` (ids ``Np-1 .. 2*Np-2``) where ``Np = 2^L``;
+  - node ``k`` at level ``l`` covers the *contiguous* leaf-slot range
+    ``[(k - (2^l - 1)) * 2^(L-l), ...)`` — contiguity is what makes every
+    downstream operation (stats, q-optimization, matvec) a dense
+    reshape/segment op instead of pointer chasing.
+
+Arbitrary N is supported by padding to ``Np = 2^L`` with zero-weight *ghost*
+leaves.  All node statistics are weighted (``W(A) = sum_i w_i``,
+``S1(A) = sum_i w_i x_i``, ``S2(A) = sum_i w_i ||x_i||^2``) so the paper's
+factorization (eq. 9) holds verbatim with ``|A| -> W(A)`` and ghosts provably
+carry zero probability mass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PartitionTree",
+    "build_tree",
+    "node_level",
+    "leaf_range",
+    "level_slice",
+]
+
+_GHOST_PROJ = 1e30  # ghosts sort to the right end of every segment
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionTree:
+    """Heap-layout balanced partition tree with weighted subtree statistics."""
+
+    # static metadata
+    L: int = dataclasses.field(metadata=dict(static=True))
+    n_points: int = dataclasses.field(metadata=dict(static=True))
+    dim: int = dataclasses.field(metadata=dict(static=True))
+
+    # leaf-order data
+    x_leaf: jax.Array  # (Np, d)   points permuted into leaf order (ghosts 0)
+    w_leaf: jax.Array  # (Np,)     weights in leaf order (ghosts 0)
+    slot_of: jax.Array  # (N,)     original row -> leaf slot
+    leaf_of: jax.Array  # (Np,)    leaf slot -> original row (ghosts -> N)
+
+    # flat per-node statistics, heap indexed, shape (n_nodes, ...)
+    W: jax.Array   # (n_nodes,)    weighted counts
+    S1: jax.Array  # (n_nodes, d)  weighted coordinate sums
+    S2: jax.Array  # (n_nodes,)    weighted squared-norm sums
+
+    @property
+    def n_leaves(self) -> int:
+        return 1 << self.L
+
+    @property
+    def n_nodes(self) -> int:
+        return (1 << (self.L + 1)) - 1
+
+    @property
+    def n_internal(self) -> int:
+        return (1 << self.L) - 1
+
+    @property
+    def total_weight(self) -> jax.Array:
+        return self.W[0]
+
+
+def node_level(node_id: np.ndarray) -> np.ndarray:
+    """Level of a heap node id (root = 0)."""
+    return np.floor(np.log2(np.asarray(node_id) + 1)).astype(np.int64)
+
+
+def level_slice(level: int) -> slice:
+    """Flat id range occupied by ``level``."""
+    return slice((1 << level) - 1, (1 << (level + 1)) - 1)
+
+
+def leaf_range(node_id: int, L: int) -> tuple[int, int]:
+    """Contiguous leaf-slot range [lo, hi) covered by ``node_id``."""
+    lvl = int(node_level(node_id))
+    idx = node_id - ((1 << lvl) - 1)
+    span = 1 << (L - lvl)
+    return idx * span, (idx + 1) * span
+
+
+def _principal_projection(xs: jax.Array, ws: jax.Array, iters: int) -> jax.Array:
+    """Projection of each point on the dominant covariance direction.
+
+    xs: (segments, s, d), ws: (segments, s).  Power iteration on the weighted
+    covariance, never materializing the (d, d) matrix.  Deterministic init.
+    Returns (segments, s) projections.
+    """
+    tot = jnp.maximum(ws.sum(axis=1, keepdims=True), 1e-12)
+    mean = (xs * ws[..., None]).sum(axis=1, keepdims=True) / tot[..., None]
+    a = (xs - mean) * jnp.sqrt(ws)[..., None]  # (seg, s, d); rows of sqrt(w)(x-mu)
+
+    d = xs.shape[-1]
+    # deterministic, slightly asymmetric init to avoid pathological symmetry
+    v = jnp.ones((xs.shape[0], d)) + 1e-3 * jnp.arange(d, dtype=xs.dtype)
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+    def body(v, _):
+        u = jnp.einsum("bsd,bd->bs", a, v)
+        v = jnp.einsum("bsd,bs->bd", a, u)
+        n = jnp.linalg.norm(v, axis=-1, keepdims=True)
+        v = jnp.where(n > 1e-12, v / jnp.maximum(n, 1e-12), v * 0 + 1.0 / math.sqrt(d))
+        return v, None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    return jnp.einsum("bsd,bd->bs", xs - mean, v)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "power_iters"))
+def _build_impl(xp: jax.Array, wp: jax.Array, L: int, power_iters: int):
+    Np, d = xp.shape
+    order = jnp.arange(Np)
+
+    for lvl in range(L):
+        seg, s = 1 << lvl, Np >> lvl
+        xs = xp[order].reshape(seg, s, d)
+        ws = wp[order].reshape(seg, s)
+        proj = _principal_projection(xs, ws, power_iters)
+        proj = jnp.where(ws > 0, proj, _GHOST_PROJ)  # ghosts go right
+        idx = jnp.argsort(proj, axis=1)
+        order = jnp.take_along_axis(order.reshape(seg, s), idx, axis=1).reshape(-1)
+
+    x_leaf = xp[order]
+    w_leaf = wp[order]
+
+    # bottom-up weighted statistics, level-major then flat-concatenated
+    Ws = [w_leaf]
+    S1s = [x_leaf * w_leaf[:, None]]
+    S2s = [(x_leaf * x_leaf).sum(-1) * w_leaf]
+    for lvl in range(L - 1, -1, -1):
+        Ws.append(Ws[-1].reshape(-1, 2).sum(1))
+        S1s.append(S1s[-1].reshape(-1, 2, d).sum(1))
+        S2s.append(S2s[-1].reshape(-1, 2).sum(1))
+    W = jnp.concatenate(Ws[::-1])
+    S1 = jnp.concatenate(S1s[::-1])
+    S2 = jnp.concatenate(S2s[::-1])
+    return order, x_leaf, w_leaf, W, S1, S2
+
+
+def build_tree(
+    x: jax.Array,
+    weights: Optional[jax.Array] = None,
+    power_iters: int = 8,
+) -> PartitionTree:
+    """Build the shared partition tree over data points ``x`` (N, d)."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    n, d = x.shape
+    if weights is None:
+        weights = jnp.ones((n,), dtype=x.dtype)
+    weights = jnp.asarray(weights, dtype=x.dtype)
+
+    L = max(1, math.ceil(math.log2(max(n, 2))))
+    np_ = 1 << L
+    xp = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    wp = jnp.pad(weights, (0, np_ - n))
+
+    order, x_leaf, w_leaf, W, S1, S2 = _build_impl(xp, wp, L, power_iters)
+
+    leaf_of = jnp.where(order < n, order, n)
+    # ghost leaves all scatter into the sacrificial slot ``n`` which is dropped
+    slot_of = (
+        jnp.full((n + 1,), -1, dtype=jnp.int32)
+        .at[leaf_of]
+        .set(jnp.arange(np_, dtype=jnp.int32))[:n]
+    )
+
+    return PartitionTree(
+        L=L,
+        n_points=n,
+        dim=d,
+        x_leaf=x_leaf,
+        w_leaf=w_leaf,
+        slot_of=slot_of,
+        leaf_of=leaf_of,
+        W=W,
+        S1=S1,
+        S2=S2,
+    )

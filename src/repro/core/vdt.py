@@ -1,0 +1,151 @@
+"""Public API: the Variational Dual-Tree transition-matrix approximation.
+
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * n)
+    y_hat = vdt.matvec(y)                   # O(|B|) Q @ y
+    y_lp  = vdt.label_propagate(y0)         # label propagation (eq. 15)
+    q     = vdt.dense_q()                   # small-N debugging / tests
+
+Pipeline (paper §3-§4): build the shared partition tree -> coarsest block
+partition (|B| = 2(Np-1)) -> alternate q-optimization (eq. 7) with bandwidth
+learning (eq. 12) -> greedy symmetric refinement to the block budget
+(eq. 19) -> O(|B|) inference (Algorithm 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as blocks_mod
+from repro.core import matvec as matvec_mod
+from repro.core import qopt as qopt_mod
+from repro.core import refine as refine_mod
+from repro.core import sigma as sigma_mod
+from repro.core.label_prop import label_propagate
+from repro.core.tree import PartitionTree, build_tree
+
+__all__ = ["VariationalDualTree", "VdtStats"]
+
+
+@dataclasses.dataclass
+class VdtStats:
+    build_tree_s: float = 0.0
+    init_qopt_s: float = 0.0
+    refine_s: float = 0.0
+    sigma_iters: int = 0
+    n_blocks: int = 0
+    bound: float = 0.0
+    sigma: float = 0.0
+
+
+@dataclasses.dataclass
+class VariationalDualTree:
+    tree: PartitionTree
+    bp: blocks_mod.BlockPartition
+    qstate: qopt_mod.QState
+    sigma: jax.Array
+    stats: VdtStats
+
+    # ------------------------------------------------------------------ fit
+    @classmethod
+    def fit(
+        cls,
+        x,
+        weights=None,
+        max_blocks: Optional[int] = None,
+        sigma: Optional[float] = None,
+        learn_sigma: bool = True,
+        refine_batch: int = 64,
+        sigma_iters: int = 10,
+        power_iters: int = 8,
+    ) -> "VariationalDualTree":
+        """Build tree + coarsest partition, fit sigma/q, refine to budget."""
+        stats = VdtStats()
+        x = jnp.asarray(x, jnp.float32)
+
+        t0 = time.perf_counter()
+        tree = build_tree(x, weights, power_iters=power_iters)
+        jax.block_until_ready(tree.W)
+        stats.build_tree_s = time.perf_counter() - t0
+
+        cap = max_blocks if max_blocks else 2 * tree.n_internal
+        bp = blocks_mod.coarsest_partition(tree, cap=int(2.5 * cap))
+
+        t0 = time.perf_counter()
+        sig = jnp.asarray(
+            sigma if sigma is not None else sigma_mod.sigma_init(x, weights),
+            jnp.float32,
+        )
+        if learn_sigma and sigma is None:
+            sig, qs, its = sigma_mod.fit_sigma_q(
+                tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
+                sig, max_iters=sigma_iters,
+            )
+            stats.sigma_iters = its
+        else:
+            qs = qopt_mod.optimize_q(
+                tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active), sig
+            )
+        jax.block_until_ready(qs.log_q)
+        stats.init_qopt_s = time.perf_counter() - t0
+
+        if max_blocks and max_blocks > bp.n_active:
+            t0 = time.perf_counter()
+            qs, sig = refine_mod.refine_to_budget(
+                bp, tree, sig, max_blocks, batch=refine_batch,
+                refit_sigma=learn_sigma,
+            )
+            jax.block_until_ready(qs.log_q)
+            stats.refine_s = time.perf_counter() - t0
+
+        stats.n_blocks = bp.n_active
+        stats.bound = float(qs.bound)
+        stats.sigma = float(sig)
+        return cls(tree=tree, bp=bp, qstate=qs, sigma=sig, stats=stats)
+
+    # ------------------------------------------------------------- inference
+    def matvec(self, y) -> jax.Array:
+        """Q @ y in O(|B| + N) (Algorithm 1)."""
+        return matvec_mod.mpt_matvec(
+            self.tree, jnp.asarray(self.bp.a), jnp.asarray(self.bp.b),
+            jnp.asarray(self.bp.active), self.qstate.log_q, y,
+        )
+
+    def label_propagate(self, y0, alpha: float = 0.01, n_iters: int = 500):
+        a = jnp.asarray(self.bp.a)
+        b = jnp.asarray(self.bp.b)
+        active = jnp.asarray(self.bp.active)
+        log_q = self.qstate.log_q
+        tree = self.tree
+
+        def mv(y):
+            return matvec_mod.mpt_matvec(tree, a, b, active, log_q, y)
+
+        return label_propagate(mv, jnp.asarray(y0), alpha=alpha, n_iters=n_iters)
+
+    # ------------------------------------------------------------- utilities
+    def refine(self, max_blocks: int, batch: int = 64) -> None:
+        self.qstate, self.sigma = refine_mod.refine_to_budget(
+            self.bp, self.tree, self.sigma, max_blocks, batch=batch
+        )
+        self.stats.n_blocks = self.bp.n_active
+        self.stats.bound = float(self.qstate.bound)
+
+    def dense_q(self) -> np.ndarray:
+        """Dense (N, N) Q — small-N tests only."""
+        q = np.asarray(
+            jnp.where(jnp.isfinite(self.qstate.log_q), jnp.exp(self.qstate.log_q), 0.0)
+        )
+        return blocks_mod.densify_q(self.bp, self.tree, q)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bp.n_active
+
+    @property
+    def bound(self) -> float:
+        return float(self.qstate.bound)

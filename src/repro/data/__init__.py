@@ -1,0 +1,4 @@
+from repro.data.pipeline import FeaturePipeline, TokenPipeline
+from repro.data.synthetic import SslDataset, by_name
+
+__all__ = ["FeaturePipeline", "SslDataset", "TokenPipeline", "by_name"]

@@ -1,0 +1,74 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links; the
+standard mitigations implemented here:
+
+  * ``bf16_compress``    — cast f32 grads to bf16 before the reduce, restore
+    after (2x traffic cut; safe for grads with loss scaling).
+  * ``int8_compress``    — per-tensor symmetric int8 with stochastic
+    rounding (4x cut).  Stochastic rounding keeps E[deq(q(g))] = g so SGD
+    remains unbiased — the property test checks both bound and bias.
+
+These run *around* the harness's psum: compress -> all-reduce -> decompress.
+Inside pjit the all-reduce is GSPMD-inserted, so the hook is applied to the
+gradient pytree before the optimizer (the reduce then happens in the low
+precision).  EXPERIMENTS.md §Perf quantifies the collective-term cut on the
+multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bf16_compress", "bf16_decompress", "int8_compress",
+           "int8_decompress", "compress_tree", "decompress_tree"]
+
+
+def bf16_compress(g: jax.Array) -> jax.Array:
+    return g.astype(jnp.bfloat16)
+
+
+def bf16_decompress(g: jax.Array) -> jax.Array:
+    return g.astype(jnp.float32)
+
+
+def int8_compress(g: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 with stochastic rounding."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scaled = g / scale
+    floor = jnp.floor(scaled)
+    frac = scaled - floor
+    rnd = jax.random.uniform(key, g.shape)
+    q = floor + (rnd < frac).astype(scaled.dtype)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, mode: str, key=None):
+    if mode == "none":
+        return grads, None
+    if mode == "bf16":
+        return jax.tree_util.tree_map(bf16_compress, grads), None
+    if mode == "int8":
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        qs, scales = zip(*(int8_compress(l, k) for l, k in zip(leaves, keys)))
+        return (jax.tree_util.tree_unflatten(treedef, qs),
+                jax.tree_util.tree_unflatten(treedef, scales))
+    raise ValueError(mode)
+
+
+def decompress_tree(grads, aux, mode: str):
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree_util.tree_map(bf16_decompress, grads)
+    if mode == "int8":
+        return jax.tree_util.tree_map(int8_decompress, grads, aux)
+    raise ValueError(mode)

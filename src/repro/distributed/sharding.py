@@ -1,0 +1,189 @@
+"""Sharding rules: 2-D parameter sharding (FSDP x TP), activation
+constraints, and per-family overrides (EP for fine-grained MoE).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` is outer data-parallelism (DCN); ``data`` is FSDP;
+``model`` is tensor/expert parallelism (ICI).
+
+Model code never names mesh axes directly — it calls ``shard_act(x, kind)``
+which looks up the active :class:`ShardCtx` (a no-op outside a mesh), so the
+same model runs on 1 CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "use_ctx", "shard_act", "param_shardings", "current_ctx"]
+
+_tls = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp: Tuple[str, ...] = ("data",)       # batch / FSDP axes
+    tp: str = "model"                     # tensor-parallel axis
+    seq_shard: bool = False               # sequence parallelism for long ctx
+    fsdp: bool = True                     # shard params over dp too
+    # §Perf opt A: when n_heads % tp_size != 0 GSPMD replicates the S^2
+    # attention einsums across the model axis (measured 16x waste on
+    # smollm/gemma3); this switches those einsums to query-sequence sharding.
+    attn_seq_shard: bool = False
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp]
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: Optional[ShardCtx]):
+    prev = current_ctx()
+    _tls.ctx = ctx
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+_ACT_SPECS = {
+    # kind -> fn(ctx) -> PartitionSpec
+    "btd": lambda c: P(c.dp_spec, c.tp if c.seq_shard else None, None),
+    "btv": lambda c: P(c.dp_spec, None, c.tp),          # logits: vocab sharded
+    "bthd": lambda c: P(c.dp_spec, None, c.tp, None),   # heads sharded
+    "btf": lambda c: P(c.dp_spec, None, c.tp),          # mlp hidden
+    "bd": lambda c: P(c.dp_spec, None),
+    "cache": lambda c: P(c.dp_spec, None, c.tp, None),  # (B, W, Hkv, D)
+    "cache_seq": lambda c: P(c.dp_spec, c.tp, None, None),  # few kv heads
+    "ecd": lambda c: P(c.tp, None, None),               # EP expert buffers
+}
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    """Apply a named activation constraint if a mesh context is active."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = _ACT_SPECS[kind](ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def shard_attn_logits(logits: jax.Array) -> jax.Array:
+    """(B, H, Sq, Sk) attention scores: heads over tp when divisible, else
+    query-sequence over tp (opt A — avoids replicated S^2 compute)."""
+    ctx = current_ctx()
+    if ctx is None or not ctx.attn_seq_shard:
+        return x_noop(logits)
+    h = logits.shape[1]
+    if h % ctx.tp_size == 0:
+        spec = P(ctx.dp_spec, ctx.tp, None, None)
+    else:
+        spec = P(ctx.dp_spec, None, ctx.tp, None)
+    return jax.lax.with_sharding_constraint(
+        logits, NamedSharding(ctx.mesh, spec))
+
+
+def x_noop(x):
+    return x
+
+
+# --------------------------------------------------------------------------
+# parameter shardings, by path-name rules
+# --------------------------------------------------------------------------
+
+def _spec_for(path: str, shape: Tuple[int, ...], ctx: ShardCtx,
+              expert_parallel: bool) -> P:
+    fsdp = ctx.dp_spec if ctx.fsdp else None
+    tp = ctx.tp
+    name = path.split("/")[-1]
+    ndim = len(shape)
+    base: Tuple = ()
+
+    if name in ("embed", "patch_proj_in"):
+        # vocab over tp ONLY: FSDP-sharding the table's d_model dim triggers
+        # a pathological 512-way SPMD partitioning path for tied embeddings
+        # (gemma3 multi-pod: stuck >10 min -> 11 s) and adds lookup gathers;
+        # the table is small per-shard (<=160 MB / tp16) so replication over
+        # dp is the right trade at pod scale.
+        base = (tp, None)
+    elif name == "unembed":
+        base = (fsdp, tp)                       # (D, V)
+    elif name in ("w_q", "w_k", "w_v"):
+        base = (fsdp, tp)                       # (D, H*hd)
+    elif name == "w_o":
+        base = (tp, fsdp)                       # (H*hd, D)
+    elif name in ("w_gate", "w_up"):
+        if ndim == 3:                           # MoE experts (E, D, F)
+            base = (tp, fsdp, None) if expert_parallel else (None, fsdp, tp)
+        else:
+            base = (fsdp, tp)                   # (D, F)
+    elif name == "w_down":
+        if ndim == 3:                           # (E, F, D)
+            base = (tp, None, fsdp) if expert_parallel else (None, tp, fsdp)
+        else:
+            base = (tp, fsdp)                   # (F, D)
+    elif name == "router":
+        base = (fsdp, None)
+    elif name == "in_proj":
+        base = (fsdp, tp)                       # ssm: (D, Din)
+    elif name == "out_proj":
+        base = (tp, fsdp)                       # ssm: (Din, D)
+    elif name in ("conv_w", "conv_b"):
+        base = (None,) * (ndim - 1) + (tp,)     # channels over tp
+    elif name in ("a_log", "d_skip", "dt_bias"):
+        base = (tp,)
+    else:                                       # norms, scalars: replicated
+        base = (None,) * ndim
+
+    base = tuple(base)[:ndim] + (None,) * max(0, ndim - len(base))
+    # stacked-layer leading dim (scan over layers): never sharded
+    if ndim > len(base):
+        base = (None,) + base
+    return P(*base)
+
+
+def param_shardings(params, ctx: ShardCtx, expert_parallel: bool = False,
+                    n_layers_stacked: bool = True):
+    """PartitionSpec pytree matching ``params`` (path-name rules)."""
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        shape = node.shape
+        name = path.split("/")[-1]
+        stacked = n_layers_stacked and "/layers/" in path + "/"
+        core_shape = shape[1:] if stacked and len(shape) > 1 else shape
+        spec = _spec_for(path if not stacked else path, core_shape, ctx,
+                         expert_parallel)
+        parts = tuple(spec)
+        if stacked and len(shape) > 1:
+            parts = (None,) + parts
+        parts = parts[: len(shape)]
+        parts = parts + (None,) * (len(shape) - len(parts))
+        # divisibility guard: drop axis sharding that does not divide
+        fixed = []
+        for dim, ax in zip(shape, parts):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= ctx.mesh.shape[a]
+            fixed.append(ax if dim % size == 0 else None)
+        return NamedSharding(ctx.mesh, P(*fixed))
+
+    return walk(params, "")

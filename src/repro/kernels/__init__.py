@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  pairwise        — tiled pairwise squared distances (kNN / exact-P build)
+  fused_lp        — flash transition matvec: exact LP step in O(N*block) mem
+  flash_attention — causal GQA attention for the LM substrate
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True off-TPU), ref.py (pure-jnp oracle), and a shape/dtype
+sweep test asserting allclose against the oracle.
+"""

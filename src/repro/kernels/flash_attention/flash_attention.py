@@ -1,0 +1,119 @@
+"""Causal GQA flash-attention Pallas kernel (TPU).
+
+Online-softmax attention that never materializes the (S, S) score matrix —
+the VMEM working set is (bq, d) + (bk, d) + (bq, bk).  Supports grouped
+query heads (kv head = q head // group) and an optional sliding window.
+
+Grid: (batch, q_heads, Sq/bq, Skv/bk) with the kv dimension innermost;
+scratch (m, s, acc) carries the online softmax across kv tiles.  Causal
+lower-triangular structure: tiles entirely above the diagonal contribute
+nothing and are masked (on real TPU runs the index-map based revisiting
+still walks them; the §Perf log quantifies the win of halving the grid with
+a triangular schedule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel"]
+
+_NEG_BIG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, s_ref, acc_ref,
+            *, scale: float, block_q: int, block_k: int, window: int,
+            causal: bool):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 0)
+    kj = jk * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask, logits, _NEG_BIG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    s_ref[...] = s_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(s_ref[...], 1e-38)[:, None]).astype(
+                           o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,          # (B, Hq, S, d)
+    k: jax.Array,          # (B, Hkv, S, d)
+    v: jax.Array,          # (B, Hkv, S, d)
+    *,
+    causal: bool = True,
+    window: int = 0,       # 0 = no sliding window
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    sp = -(-s // block_q) * block_q
+    spk = -(-s // block_k) * block_k
+    assert sp == spk or True
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, spk - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, spk - s), (0, 0)))
+
+    kern = functools.partial(
+        _kernel, scale=float(d) ** -0.5, block_q=block_q, block_k=block_k,
+        window=window, causal=causal)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hq, sp // block_q, spk // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s, :]

@@ -1,0 +1,6 @@
+from repro.kernels.fused_lp.ops import fused_lp_matvec
+from repro.kernels.fused_lp.ref import (fused_lp_matvec_dense_ref,
+                                        fused_lp_matvec_ref)
+
+__all__ = ["fused_lp_matvec", "fused_lp_matvec_ref",
+           "fused_lp_matvec_dense_ref"]

@@ -1,0 +1,17 @@
+"""jit'd public wrapper for the fused LP matvec kernel."""
+import functools
+
+import jax
+
+from repro.kernels.fused_lp.fused_lp import fused_lp_matvec_kernel
+
+__all__ = ["fused_lp_matvec"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "block_m", "block_n"))
+def fused_lp_matvec(x, y, sigma: float, block_m: int = 256,
+                    block_n: int = 256):
+    return fused_lp_matvec_kernel(
+        x, y, sigma, block_m=block_m, block_n=block_n,
+        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LP matvec: re-exports the blocked streaming
+reference from core.baselines plus a direct dense form."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec
+
+__all__ = ["fused_lp_matvec_ref", "fused_lp_matvec_dense_ref"]
+
+
+def fused_lp_matvec_ref(x, y, sigma):
+    return streaming_exact_matvec(x, y, jnp.asarray(sigma, jnp.float32))
+
+
+def fused_lp_matvec_dense_ref(x, y, sigma):
+    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    return p @ y

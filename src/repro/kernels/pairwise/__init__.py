@@ -1,0 +1,4 @@
+from repro.kernels.pairwise.ops import pairwise_sq_dists
+from repro.kernels.pairwise.ref import pairwise_sq_dists_ref
+
+__all__ = ["pairwise_sq_dists", "pairwise_sq_dists_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the pairwise squared-distance kernel."""
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pairwise_sq_dists_ref"]
+
+
+@jax.jit
+def pairwise_sq_dists_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,452 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This proves the production mesh lowers + compiles;
+# smoke tests and benchmarks run in normal single-device processes.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, cell_is_applicable, input_specs  # noqa: E402
+from repro.distributed.sharding import (ShardCtx, param_shardings,  # noqa: E402
+                                        use_ctx)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import collective_bytes, roofline_terms  # noqa: E402
+from repro.models.transformer import init_lm  # noqa: E402
+from repro.models.whisper import init_encdec  # noqa: E402
+from repro.serving.decode import decode_step, prefill  # noqa: E402
+from repro.training.optimizer import AdamWConfig  # noqa: E402
+from repro.training.train_step import init_train_state, make_train_step  # noqa: E402
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# hillclimb knobs set per-variant by perf_iter.py (default = baseline)
+CTX_KW: dict = {}
+TRAIN_KW: dict = {}
+
+
+def _ctx_for(mesh, cfg, shape) -> ShardCtx:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    seq_shard = shape.seq_len >= 32_768 and shape.kind != "decode"
+    return ShardCtx(mesh=mesh, dp=dp, tp="model", seq_shard=seq_shard,
+                    **CTX_KW)
+
+
+def _batch_shardings(tree, ctx):
+    def spec(x):
+        nd = len(x.shape)
+        parts = [None] * nd
+        if x.shape[0] % _axis_size(ctx, ctx.dp_spec) == 0:
+            parts[0] = ctx.dp_spec
+        return NamedSharding(ctx.mesh, P(*parts))
+
+    return jax.tree_util.tree_map(spec, tree)
+
+
+def _axis_size(ctx, ax) -> int:
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= ctx.mesh.shape[a]
+        return n
+    return ctx.mesh.shape[ax]
+
+
+def _decode_state_shardings(state_sds, ctx):
+    """Caches: batch over dp when divisible; kv-heads over tp when divisible,
+    else cache-seq over tp (few-kv-head archs; uneven shards are padded)."""
+    tp_size = _axis_size(ctx, ctx.tp)
+    dp_size = _axis_size(ctx, ctx.dp_spec)
+
+    def spec(x):
+        nd = len(x.shape)
+        parts = [None] * nd
+        if nd >= 2 and x.shape[1] % dp_size == 0:
+            parts[1] = ctx.dp_spec          # (L, B, ...) batch
+        if nd == 5:                          # (L, B, W, H, D) kv cache
+            if x.shape[3] % tp_size == 0:
+                parts[3] = ctx.tp
+            else:
+                parts[2] = ctx.tp
+        elif nd == 4:                        # (L, B, H*, ...) ssm state/conv
+            if x.shape[2] % tp_size == 0:
+                parts[2] = ctx.tp
+            elif x.shape[3] % tp_size == 0:
+                parts[3] = ctx.tp
+        return NamedSharding(ctx.mesh, P(*parts))
+
+    return jax.tree_util.tree_map(spec, state_sds)
+
+
+def _init_fn(cfg):
+    return init_encdec if cfg.family == "audio" else init_lm
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_override=None):
+    """Returns (fn, args_sds, in_shardings) for one (arch x shape x mesh)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = _ctx_for(mesh, cfg, shape)
+    kwargs_sds, meta = input_specs(cfg, shape)
+
+    key = jax.random.PRNGKey(0)
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(_init_fn(cfg)(cfg, key), opt_cfg))
+        pshard = param_shardings(state_sds.params, ctx,
+                                 expert_parallel=cfg.expert_parallel)
+        state_shard = type(state_sds)(
+            params=pshard,
+            opt=type(state_sds.opt)(
+                step=NamedSharding(mesh, P()),
+                mu=pshard, nu=pshard),
+            step=NamedSharding(mesh, P()),
+        )
+        batch_shard = _batch_shardings(kwargs_sds["batch"], ctx)
+        step = make_train_step(cfg, opt_cfg, **TRAIN_KW)
+
+        def fn(state, batch):
+            with use_ctx(ctx):
+                return step(state, batch)
+
+        return (fn, (state_sds, kwargs_sds["batch"]),
+                (state_shard, batch_shard), cfg, shape, meta, mesh, ctx)
+
+    params_sds = jax.eval_shape(lambda: _init_fn(cfg)(cfg, key))
+    pshard = param_shardings(params_sds, ctx,
+                             expert_parallel=cfg.expert_parallel)
+    if shape.kind == "prefill":
+        extras = {k: v for k, v in kwargs_sds.items() if k != "tokens"}
+        ex_shard = _batch_shardings(extras, ctx)
+        tok_shard = _batch_shardings(kwargs_sds["tokens"], ctx)
+
+        def fn(params, tokens, **ex):
+            with use_ctx(ctx):
+                return prefill(params, tokens, cfg, **ex)
+
+        args = (params_sds, kwargs_sds["tokens"])
+        shards = (pshard, tok_shard)
+        if extras:
+            return (fn, args + (extras,), shards + (ex_shard,), cfg, shape,
+                    meta, mesh, ctx)
+        return fn, args, shards, cfg, shape, meta, mesh, ctx
+
+    # decode
+    state_sds = kwargs_sds["state"]
+    st_shard = _decode_state_shardings(state_sds, ctx)
+    tok_shard = _batch_shardings(kwargs_sds["token"], ctx)
+
+    def fn(params, token, state):
+        with use_ctx(ctx):
+            return decode_step(params, token, state, cfg)
+
+    return (fn, (params_sds, kwargs_sds["token"], state_sds),
+            (pshard, tok_shard, st_shard), cfg, shape, meta, mesh, ctx)
+
+
+def _extras_to_kwargs(fn, args):
+    """prefill extras dict (patches/frames) is passed positionally."""
+    if isinstance(args[-1], dict) and "tokens" not in args[-1]:
+        *pos, ex = args
+
+        def wrapped(*a):
+            return fn(*a[:-1], **a[-1])
+
+        return wrapped, tuple(pos) + (ex,)
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, cfg_override=None,
+             variant: str = "") -> dict:
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    if variant:
+        cell_id += f"__{variant}"
+    out_path = ART / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(out_path, rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        # ---- compile 1: scanned layers — the production artifact ---------
+        # proves (lower + compile + memory fit); XLA costs the scan body
+        # once, so FLOPs/bytes come from compile 2.
+        fn, args, shards, cfg, shape, meta, mesh, ctx = build_cell(
+            arch, shape_name, multi_pod)
+        fn, args = _extras_to_kwargs(fn, args)
+        with mesh:
+            jfn = jax.jit(fn, in_shardings=shards)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_d = {"error": str(e)}
+        hlo_scanned = compiled.as_text()
+        coll_scanned = collective_bytes(hlo_scanned)
+        del compiled, lowered
+
+        # ---- compile 2: trip-count-true cost analysis --------------------
+        # (single-pod only: the roofline table is single-pod; the multi-pod
+        # pass exists to prove the "pod" axis shards.)
+        # Two methods: full unroll twin (exact), or for archs whose unrolled
+        # compile is prohibitive on 1 CPU core (MoE dispatch x 28-32 layers,
+        # enc-dec), the MARGINAL method: compile unrolled twins at L=2 and
+        # L=4 and extrapolate linearly in L — exact for layer-homogeneous
+        # stacks since cost(L) = other + L * body.
+        n_chips = mesh.devices.size
+        base_cfg = cfg_override if cfg_override is not None else \
+            get_config(arch)
+        marginal = arch in ("deepseek-moe-16b", "mixtral-8x7b",
+                            "whisper-medium")
+        if not multi_pod and not marginal:
+            t1 = time.time()
+            ucfg = dataclasses.replace(base_cfg, scan_unroll=True)
+            fn2, args2, shards2, *_ = build_cell(arch, shape_name, multi_pod,
+                                                 cfg_override=ucfg)
+            fn2, args2 = _extras_to_kwargs(fn2, args2)
+            with mesh:
+                compiled2 = jax.jit(fn2, in_shardings=shards2).lower(
+                    *args2).compile()
+            t_unroll = time.time() - t1
+            cost = compiled2.cost_analysis() or {}
+            hlo = compiled2.as_text()
+            coll = collective_bytes(hlo)
+        elif not multi_pod:
+            t1 = time.time()
+            costs, colls = [], []
+            for k in (2, 4):
+                kw = dict(n_layers=k, scan_unroll=True)
+                if base_cfg.is_encoder_decoder:
+                    kw["n_encoder_layers"] = k
+                if base_cfg.attn_every:
+                    kw["attn_every"] = max(1, k // 2)
+                ucfg = dataclasses.replace(base_cfg, **kw)
+                fnk, argsk, shardsk, *_ = build_cell(
+                    arch, shape_name, multi_pod, cfg_override=ucfg)
+                fnk, argsk = _extras_to_kwargs(fnk, argsk)
+                with mesh:
+                    ck = jax.jit(fnk, in_shardings=shardsk).lower(
+                        *argsk).compile()
+                costs.append(ck.cost_analysis() or {})
+                colls.append(collective_bytes(ck.as_text()))
+                del ck
+            t_unroll = time.time() - t1
+            L = base_cfg.n_layers
+            scale = (L - 2) / 2.0
+
+            def extrap(a, b):
+                return a + scale * (b - a)
+
+            cost = {k: extrap(float(costs[0].get(k, 0.0)),
+                              float(costs[1].get(k, 0.0)))
+                    for k in ("flops", "bytes accessed", "transcendentals")}
+            coll = {k: int(extrap(colls[0].get(k, 0), colls[1].get(k, 0)))
+                    for k in set(colls[0]) | set(colls[1])}
+            hlo = hlo_scanned
+        else:
+            t_unroll = 0.0
+            cost = {}
+            hlo = hlo_scanned
+            coll = coll_scanned
+
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * cfg.active_param_count() * meta["tokens_per_step"]
+        # cost_analysis flops on the partitioned module are per-device;
+        # globalize for the roofline (calibrated in tests/test_roofline.py)
+        rl = roofline_terms(
+            {"flops": float(cost.get("flops", 0.0)) * n_chips,
+             "bytes accessed": float(cost.get("bytes accessed", 0.0)) * n_chips},
+            coll, n_chips, model_flops=model_flops,
+            tokens_per_step=meta["tokens_per_step"])
+        # collective bytes are whole-program (already global): undo chip scale
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            unroll_compile_s=round(t_unroll, 2),
+            collectives_scanned=coll_scanned,
+            n_chips=n_chips,
+            cost_analysis={k: cost[k] for k in sorted(cost)[:40]},
+            memory_analysis=mem_d,
+            collectives=coll,
+            hlo_bytes=len(hlo),
+            roofline=rl.as_dict(),
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: Path, rec: dict):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def run_vdt_cell(multi_pod: bool, force: bool = False,
+                 variant: str = "") -> dict:
+    """The paper-representative cell: distributed VDT LP step (1M points)."""
+    from repro.configs import paper_vdt
+    from repro.core.distributed import lp_step_leaforder
+
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    cell_id = f"paper-vdt__lp_1m__{mesh_name}"
+    if variant:
+        cell_id += f"__{variant}"
+    out_path = ART / f"{cell_id}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec = {"cell": cell_id, "arch": "paper-vdt", "shape": "lp_1m",
+           "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        specs, meta = paper_vdt.input_specs()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        all_axes = tuple(mesh.axis_names)  # every device is a data shard
+
+        def shard1(x, rows_sharded=True):
+            parts = [None] * len(x.shape)
+            if rows_sharded and x.shape[0] % mesh.devices.size == 0:
+                parts[0] = all_axes
+            return NamedSharding(mesh, P(*parts))
+
+        shards = {k: shard1(v) for k, v in specs.items()}
+        L = meta["L"]
+
+        import jax.numpy as _jnp
+        step_kw = {}
+        if "sorted" in variant:
+            step_kw["sorted_blocks"] = True
+        if "bf16" in variant:
+            step_kw["carrier_dtype"] = _jnp.bfloat16
+
+        def fn(y_leaf, y0_leaf, a, b, q):
+            return lp_step_leaforder(y_leaf, y0_leaf, a, b, q,
+                                     paper_vdt.ALPHA, L, **step_kw)
+
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=tuple(shards[k] for k in specs)
+            ).lower(*specs.values())
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_chips = mesh.devices.size
+        # matvec useful work: 2 flops per (block x class) + leaf axpy
+        model_flops = (2 * paper_vdt.BLOCKS_PER_POINT * paper_vdt.N_POINTS
+                       * paper_vdt.N_CLASSES)
+        rl = roofline_terms(
+            {"flops": float(cost.get("flops", 0.0)) * n_chips,
+             "bytes accessed": float(cost.get("bytes accessed", 0.0))
+             * n_chips},
+            coll, n_chips, model_flops=model_flops,
+            tokens_per_step=meta["tokens_per_step"])
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k))
+                     for k in ("argument_size_in_bytes",
+                               "output_size_in_bytes", "temp_size_in_bytes")
+                     if hasattr(mem, k)}
+        except Exception as e:
+            mem_d = {"error": str(e)}
+        rec.update(status="ok", lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2), n_chips=n_chips,
+                   collectives=coll, memory_analysis=mem_d,
+                   roofline=rl.as_dict(), hlo_bytes=len(hlo))
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _write(out_path, rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.all or args.arch is None:
+        for mp in meshes:
+            rec = run_vdt_cell(mp, force=args.force)
+            print(f"[{rec['status']:7s}] {rec['cell']}", flush=True)
+            results.append(rec)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, force=args.force)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f" compile={rec['compile_s']}s"
+                             f" bottleneck={rl['bottleneck']}"
+                             f" step={rl['step_time_s']:.4f}s"
+                             f" mfu={rl['mfu_at_roofline']:.2%}")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status:7s}] {rec['cell']}{extra}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skipped-by-design, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — jax locks the device count on first init,
+and only launch/dryrun.py (its own process) forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_names"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,71 @@
+"""§Perf hillclimb driver: re-runs a dry-run cell under named optimization
+variants and records before/after roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.perf_iter --cell smollm-360m:train_4k \
+        --variant attn_seq_shard
+
+Variants (each is one hypothesis from the §Perf log):
+  attn_seq_shard — shard the S^2 attention einsums over query-sequence when
+                   n_heads %% tp != 0 (kills replicated compute)
+  chunked_ce     — scan the CE loss over sequence chunks (peak-memory cut)
+  noremat        — disable activation checkpointing (FLOPs down, memory up)
+  all            — attn_seq_shard + chunked_ce
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import dataclasses      # noqa: E402
+import json             # noqa: E402
+
+from repro.configs.registry import get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+
+VARIANTS = {
+    "attn_seq_shard": dict(ctx=dict(attn_seq_shard=True), cfg={}, train={}),
+    "chunked_ce": dict(ctx={}, cfg={}, train=dict(chunked_ce=512)),
+    "noremat": dict(ctx={}, cfg=dict(remat=True), train={}),
+    "all": dict(ctx=dict(attn_seq_shard=True), cfg={},
+                train=dict(chunked_ce=512)),
+}
+VARIANTS["noremat"]["cfg"] = dict(remat=False)
+
+
+def run_variant(arch: str, shape: str, variant: str, force=False):
+    v = VARIANTS[variant]
+    dryrun.CTX_KW.clear()
+    dryrun.CTX_KW.update(v["ctx"])
+    dryrun.TRAIN_KW.clear()
+    dryrun.TRAIN_KW.update(v["train"])
+    cfg = get_config(arch)
+    if v["cfg"]:
+        cfg = dataclasses.replace(cfg, **v["cfg"])
+    rec = dryrun.run_cell(arch, shape, multi_pod=False, force=force,
+                          cfg_override=cfg, variant=variant)
+    dryrun.CTX_KW.clear()
+    dryrun.TRAIN_KW.clear()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True,
+                    choices=list(VARIANTS) + ["baseline"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    if args.variant == "baseline":
+        rec = dryrun.run_cell(arch, shape, multi_pod=False, force=args.force)
+    else:
+        rec = run_variant(arch, shape, args.variant, force=args.force)
+    out = {k: rec.get(k) for k in ("cell", "status", "compile_s",
+                                   "unroll_compile_s", "error")}
+    if rec.get("roofline"):
+        out["roofline"] = rec["roofline"]
+        out["collectives_total_gb"] = rec["collectives"]["total"] / 1e9
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+collective_bytes is parsed from the post-SPMD optimized HLO
+(``compiled.as_text()``): we sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+TPU v5e hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "Roofline"]
+
+
+class HW:
+    PEAK_FLOPS = 197e12        # bf16 per chip
+    HBM_BW = 819e9             # bytes/s per chip
+    LINK_BW = 50e9             # bytes/s per ICI link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        kind = None
+        rhs_head = rhs.lstrip()
+        for k in _COLLECTIVES:
+            # op name directly after result type(s)
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs_head):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs_head:
+            continue  # counted at -start
+        n = 0
+        # result type(s) appear at the start of rhs, before the op name
+        head = rhs_head.split(kind)[0]
+        for m in _SHAPE_RE.finditer(head):
+            n += _shape_bytes(m.group(1), m.group(2))
+        out[kind] += n
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    n_chips: int
+    tokens_per_step: int = 0
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * HW.PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HW.HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.n_chips * HW.LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Optimistic perfectly-overlapped step time: max of the terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        if self.model_flops and self.step_time > 0:
+            return self.model_flops / (
+                self.n_chips * HW.PEAK_FLOPS * self.step_time)
+        return 0.0
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_at_roofline": self.mfu,
+            "tokens_per_step": self.tokens_per_step,
+        }
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int,
+                   model_flops: float = 0.0,
+                   tokens_per_step: int = 0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        flops=flops, hbm_bytes=byts, coll_bytes=float(coll.get("total", 0)),
+        n_chips=n_chips, model_flops=model_flops,
+        tokens_per_step=tokens_per_step,
+    )

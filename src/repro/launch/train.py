@@ -1,0 +1,122 @@
+"""Training launcher: real loop with checkpoint/restart, preemption
+handling, deterministic resumable data, and local-mesh sharding.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch smollm-360m --smoke --steps 100 --ckpt-dir /tmp/run1
+
+Restarting the same command resumes from the latest checkpoint (elastic:
+the device count may differ between runs).  SIGTERM triggers a final
+checkpoint + clean exit (preemption-safe).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.sharding import ShardCtx, param_shardings, use_ctx
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import init_lm
+from repro.models.whisper import init_encdec
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.preemption import GracefulShutdown, Watchdog
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                          total_steps=args.steps)
+    mesh = make_local_mesh()
+    fingerprint = ckpt.config_fingerprint(cfg)
+
+    ctx = ShardCtx(mesh=mesh, dp=("data",))
+    init_fn = init_encdec if cfg.family == "audio" else init_lm
+    params = init_fn(cfg, jax.random.PRNGKey(0))
+    state = init_train_state(params, opt_cfg)
+
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, start_step = ckpt.restore(args.ckpt_dir, state,
+                                         expect_fingerprint=fingerprint)
+        print(f"resumed from step {start_step}")
+
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch)
+
+    raw_step = make_train_step(cfg, opt_cfg,
+                               n_microbatches=args.microbatches)
+
+    def stepped(state, batch):
+        with use_ctx(ctx):
+            return raw_step(state, batch)
+
+    train_step = jax.jit(stepped, donate_argnums=0)
+
+    shutdown = GracefulShutdown()
+    watchdog = Watchdog(timeout_s=600.0,
+                        on_stall=lambda dt: print(f"WATCHDOG: stalled {dt:.0f}s",
+                                                  flush=True)).start()
+    losses = []
+    t0 = time.time()
+    for step_i in range(start_step, args.steps):
+        batch = {"tokens": jnp.asarray(pipe.batch(step_i))}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+        state, metrics = train_step(state, batch)
+        watchdog.beat()
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step_i % args.log_every == 0 or step_i == args.steps - 1:
+            dt = time.time() - t0
+            tps = (step_i - start_step + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {step_i:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} tok/s {tps:.0f}", flush=True)
+        if args.ckpt_dir and (step_i + 1) % args.ckpt_every == 0:
+            ckpt.save_async(args.ckpt_dir, step_i + 1, state, fingerprint)
+        if shutdown.requested:
+            print("preemption requested: checkpointing and exiting")
+            if args.ckpt_dir:
+                ckpt.save(args.ckpt_dir, step_i + 1, state, fingerprint)
+            return 0
+    if args.ckpt_dir:
+        ckpt.wait_for_saves()
+        ckpt.save(args.ckpt_dir, args.steps, state, fingerprint)
+    watchdog.stop()
+    first = np.mean(losses[:5]) if len(losses) >= 5 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

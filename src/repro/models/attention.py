@@ -1,0 +1,150 @@
+"""Grouped-query attention with causal / sliding-window / bidirectional
+masks, RoPE, and a KV-cache decode path (full cache or SWA ring buffer)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_attn_logits
+from repro.models.layers import dense_init, rope
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "KVCache"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    k: jax.Array        # (B, W, Hkv, D) — W = cache window (<= full seq)
+    v: jax.Array        # (B, W, Hkv, D)
+    pos: jax.Array      # () int32 — absolute position of next token
+    # static: ring buffer (SWA, O(window) memory) vs linear cache
+    ring: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+
+def attn_init(key, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "w_q": dense_init(kq, d, hq * hd),
+        "w_k": dense_init(kk, d, hkv * hd),
+        "w_v": dense_init(kv, d, hkv * hd),
+        "w_o": dense_init(ko, hq * hd, d, scale=(hq * hd) ** -0.5),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _mask(sq: int, skv: int, q_offset, causal: bool, window: Optional[jax.Array]):
+    """(sq, skv) boolean mask. ``window`` may be a traced scalar (local:global
+    interleave inside scan-over-layers)."""
+    qi = q_offset + jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        m &= kj <= qi
+    if window is not None:
+        m &= (qi - kj) < window
+    return m
+
+
+def attn_apply(
+    params,
+    x: jax.Array,                      # (B, S, D)
+    cfg,
+    positions: jax.Array,              # (B, S)
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # traced or static SWA width
+    kv_x: Optional[jax.Array] = None,  # cross-attention source (B, Skv, D)
+    use_rope: bool = True,
+) -> jax.Array:
+    dt = x.dtype
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ params["w_q"].astype(dt), hq, hd)
+    k = _split_heads(src @ params["w_k"].astype(dt), hkv, hd)
+    v = _split_heads(src @ params["w_v"].astype(dt), hkv, hd)
+    if use_rope and kv_x is None:
+        q, k = rope(q, k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    logits = shard_attn_logits(logits)
+    if kv_x is None:
+        m = _mask(x.shape[1], src.shape[1], 0, causal, window)
+        logits = jnp.where(m[None, None], logits, jnp.finfo(logits.dtype).min)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(dt)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(x.shape[0], x.shape[1], hq * hd)
+    return o @ params["w_o"].astype(dt)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    """Cache window: full seq for global attention, ring of ``sliding_window``
+    for pure-SWA archs (mixtral) — O(window) memory regardless of context."""
+    ring = cfg.sliding_window is not None and cfg.local_global_ratio == 0
+    w = min(max_len, cfg.sliding_window) if ring else max_len
+    shape = (batch, w, cfg.n_kv_heads, cfg.head_dim_)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32), ring=ring,
+    )
+
+
+def attn_decode(
+    params,
+    x: jax.Array,                      # (B, 1, D) — single new token
+    cache: KVCache,
+    cfg,
+    window: Optional[jax.Array] = None,
+):
+    """One decode step against the cache; returns (out, new_cache)."""
+    dt = x.dtype
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    b = x.shape[0]
+    q = _split_heads(x @ params["w_q"].astype(dt), hq, hd)
+    k_new = _split_heads(x @ params["w_k"].astype(dt), hkv, hd)
+    v_new = _split_heads(x @ params["w_v"].astype(dt), hkv, hd)
+    pos = jnp.broadcast_to(cache.pos[None, None], (b, 1))
+    q, k_new = rope(q, k_new, pos, cfg.rope_theta)
+
+    w = cache.k.shape[1]
+    slot = cache.pos % w if cache.ring else jnp.minimum(cache.pos, w - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+
+    kk = _repeat_kv(k, hq // hkv)
+    vv = _repeat_kv(v, hq // hkv)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / (hd ** 0.5)
+
+    # valid positions: absolute index of each cache slot <= pos, within window
+    idx = jnp.arange(w)
+    if cache.ring:
+        base = cache.pos - (cache.pos % w)
+        abs_idx = jnp.where(idx <= (cache.pos % w), base + idx, base - w + idx)
+    else:
+        abs_idx = idx
+    valid = (abs_idx <= cache.pos) & (abs_idx >= 0)
+    if window is not None:
+        valid &= (cache.pos - abs_idx) < window
+    logits = jnp.where(valid[None, None, None, :], logits,
+                       jnp.finfo(logits.dtype).min)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(dt)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(b, 1, hq * hd)
+    out = o @ params["w_o"].astype(dt)
+    return out, KVCache(k=k, v=v, pos=cache.pos + 1, ring=cache.ring)

@@ -1,0 +1,70 @@
+"""Common neural layers: RMSNorm, RoPE, gated MLP, initializers.
+
+Pure JAX: params are nested dicts of arrays; every layer is an
+``init(key, ...) -> params`` plus an ``apply(params, x, ...) -> y`` pair.
+Compute dtype is configurable (bf16 on TPU); params are stored f32 and cast
+at use (mixed precision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "rms_norm", "rope", "mlp_init", "mlp_apply", "Dtypes"]
+
+
+class Dtypes:
+    @staticmethod
+    def compute(cfg) -> jnp.dtype:
+        return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    """Truncated-normal fan-in init, stored f32."""
+    s = scale if scale is not None else d_in ** -0.5
+    return jax.random.truncated_normal(key, -2, 2, (d_in, d_out), jnp.float32) * s
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in f32 for stability, cast back to input dtype."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(q: jax.Array, k: jax.Array, positions: jax.Array, theta: float):
+    """Rotary embeddings.  q: (B,S,Hq,D), k: (B,S,Hk,D), positions: (B,S)."""
+    d = q.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        out = jnp.concatenate(
+            [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+        )
+        return out.astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def mlp_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_apply(params, x: jax.Array, compute_dtype) -> jax.Array:
+    """Gated SiLU MLP (llama-style)."""
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with static-shape
+capacity dispatch (TPU-friendly — no ragged tensors, no host sync).
+
+Dispatch: flatten (token, expert-choice) assignments, group by expert with a
+stable argsort, compute each assignment's slot inside its expert via
+``searchsorted`` group starts, drop beyond-capacity assignments, and gather
+tokens into an (E, C, D) buffer.  Expert FFNs run as one batched einsum whose
+expert dimension is sharded over the ``model`` mesh axis when
+``cfg.expert_parallel`` (deepseek: 64 experts / 16 shards -> EP + all-to-all
+from GSPMD); otherwise experts are replicated and ``d_ff`` is sharded
+(mixtral: 8 experts < 16 shards -> expert tensor parallelism).
+
+Aux load-balance loss (Switch-style): mean(fraction_tokens_e * mean_prob_e) * E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg):
+    d = cfg.d_model
+    fe = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(kr, d, e, scale=0.02),
+        "w_gate": jax.random.normal(k1, (e, d, fe), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (e, d, fe), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (e, fe, d), jnp.float32) * fe ** -0.5,
+    }
+    if cfg.n_shared_experts:
+        fs = fe * cfg.n_shared_experts
+        g1, g2, g3 = jax.random.split(ks, 3)
+        params["shared"] = {
+            "w_gate": dense_init(g1, d, fs),
+            "w_up": dense_init(g2, d, fs),
+            "w_down": dense_init(g3, fs, d, scale=fs ** -0.5),
+        }
+    return params
+
+
+def _dispatch_indices(top_i: jax.Array, n_experts: int, capacity: int):
+    """top_i: (T, k) expert choices.  Returns (table, valid):
+    table (E, C) holds flat assignment indices into (T*k,), sentinel T*k."""
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                        # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)          # group by expert
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts))  # (E,)
+    pos = jnp.arange(t * k) - starts[sorted_e]        # slot within expert
+    keep = pos < capacity
+    dest = jnp.where(keep, sorted_e * capacity + pos, n_experts * capacity)
+    table = jnp.full((n_experts * capacity + 1,), t * k, jnp.int32)
+    table = table.at[dest].set(order.astype(jnp.int32), mode="drop")
+    table = table[:-1].reshape(n_experts, capacity)
+    valid = table < t * k
+    return table, valid
+
+
+def moe_apply(params, x: jax.Array, cfg, compute_dtype):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)            # (T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)             # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(cfg.capacity_factor * t * k / e) + 1
+    table, valid = _dispatch_indices(top_i, e, capacity)
+
+    # gather tokens into expert buffers: (E, C, D)
+    tok_of = jnp.where(valid, table // k, t)           # sentinel row t
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xt_pad[tok_of].astype(compute_dtype)
+
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wu)
+    ye = jnp.einsum("ecf,efd->ecd", h, wd)             # (E, C, D)
+
+    # combine: scatter back with routing weights
+    wslot = jnp.where(
+        valid,
+        jnp.take(top_p.reshape(-1), jnp.minimum(table, t * k - 1)),
+        0.0,
+    ).astype(compute_dtype)
+    y = jnp.zeros((t + 1, d), compute_dtype).at[tok_of].add(ye * wslot[..., None])
+    y = y[:t]
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        hg = jax.nn.silu(xt.astype(compute_dtype) @ sp["w_gate"].astype(compute_dtype))
+        hu = xt.astype(compute_dtype) @ sp["w_up"].astype(compute_dtype)
+        y = y + (hg * hu) @ sp["w_down"].astype(compute_dtype)
+
+    # Switch-style load-balance aux loss
+    frac = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    imp = probs.mean(0)
+    aux = (frac * imp).sum() * e
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD — state-space duality) block: chunked quadratic-within /
+recurrent-across scan for training and prefill, O(1)-per-token recurrent
+update for decode (arXiv:2405.21060).
+
+Layout per layer:
+  in_proj : D -> [z (Di), x (Di), B (G*N), C (G*N), dt (H)]
+  conv1d  : causal depthwise (kernel K) over the (x, B, C) channels
+  SSD     : h' = exp(dt*A) h + dt * B x ;  y = C h + D_skip * x
+  out_proj: Di -> D                         (gated by silu(z))
+
+Di = expand * D, H = Di / head_dim, G = ssm_groups, N = ssm_state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "SSMCache", "init_ssm_cache"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SSMCache:
+    conv: jax.Array    # (B, K-1, conv_channels) last inputs for causal conv
+    state: jax.Array   # (B, H, P, N) recurrent SSM state
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": dense_init(k1, d, d_in_proj),
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_ch), jnp.float32)
+        * (cfg.ssm_conv * conv_ch) ** -0.5,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jax.random.uniform(
+            k3, (h,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1)
+        ),
+        "out_proj": dense_init(k4, di, d, scale=di ** -0.5),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * g * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence: xbc (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[i, j] = sum_{j<k<=i} a_k."""
+    s = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)     positive step sizes
+    a: jax.Array,      # (H,)          negative decay rates
+    bmat: jax.Array,   # (B, S, G, N)
+    cmat: jax.Array,   # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+):
+    """Chunked SSD scan; returns (y (B,S,H,P), final_state)."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    br = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,l,h,n)
+    cr = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    da = dtr * a[None, None, None, :]          # (b, nc, l, h) log-decay
+    da_cum = jnp.cumsum(da, axis=2)            # within-chunk cumulative
+    da_tot = da_cum[:, :, -1, :]               # (b, nc, h)
+
+    # --- intra-chunk (quadratic, attention-like with decay kernel) ---------
+    ell = jnp.exp(_segsum(jnp.swapaxes(da, 2, 3)))      # (b, nc, h, l, l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", cr, br)   # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bchls,bchls,bcshp,bcsh->bclhp",
+                        scores, ell, xr, dtr)
+
+    # --- chunk states -------------------------------------------------------
+    decay_states = jnp.exp(da_tot[:, :, None, :] - da_cum)      # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchpn",
+                        br, decay_states, dtr, xr)              # (b,nc,h,p,n)
+
+    # --- inter-chunk recurrence over chunk boundary states -----------------
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        st, dtot = inp                                   # (b,h,p,n), (b,h)
+        new = carry * jnp.exp(dtot)[:, :, None, None] + st
+        return new, carry                                # emit PREVIOUS state
+
+    states_t = jnp.moveaxis(states, 1, 0)                # (nc, b, h, p, n)
+    datot_t = jnp.moveaxis(da_tot, 1, 0)                 # (nc, b, h)
+    final, prev_states = jax.lax.scan(step, h0, (states_t, datot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b, nc, h, p, n)
+
+    # --- inter-chunk output contribution ------------------------------------
+    state_decay = jnp.exp(da_cum)                        # (b, nc, l, h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_apply(params, x: jax.Array, cfg, compute_dtype,
+              h0: Optional[jax.Array] = None, return_state: bool = False):
+    """Full-sequence SSD block: x (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    proj = x @ params["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(compute_dtype),
+                       params["conv_b"].astype(compute_dtype))
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di : di + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., di + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    y, hf = ssd_chunked(
+        xs.astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        chunk=min(cfg.ssm_chunk, s), h0=h0,
+    )
+    y = y.astype(compute_dtype)
+    y = y + xs * params["d_skip"].astype(compute_dtype)[None, None, :, None]
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(compute_dtype)
+    if return_state:
+        return out, hf
+    return out
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> SSMCache:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    )
+
+
+def ssm_decode(params, x: jax.Array, cache: SSMCache, cfg, compute_dtype):
+    """One-token recurrent update: x (B, 1, D) -> (out, new_cache). O(1)/token."""
+    b = x.shape[0]
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    proj = x @ params["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # causal conv against the cached window
+    win = jnp.concatenate([cache.conv, xbc], axis=1)     # (B, K, C)
+    w = params["conv_w"].astype(compute_dtype)
+    conv_out = (win * w[None]).sum(axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(conv_out + params["conv_b"].astype(compute_dtype))
+
+    xs = xbc1[..., :di].reshape(b, h, p)
+    bmat = jnp.repeat(xbc1[..., di : di + g * n].reshape(b, g, n), h // g, axis=1)
+    cmat = jnp.repeat(xbc1[..., di + g * n :].reshape(b, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * a[None, :])                     # (B, H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bmat.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    state = cache.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", cmat.astype(jnp.float32), state)
+    y = y.astype(compute_dtype) + xs * params["d_skip"].astype(compute_dtype)[None, :, None]
+    y = y.reshape(b, 1, di) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(compute_dtype)
+    return out, SSMCache(conv=win[:, 1:], state=state)

@@ -1,0 +1,164 @@
+"""Decoder-only LM assembly covering the dense / moe / ssm / hybrid / vlm
+families.  Layers are scanned (stacked params) for O(1) HLO size; per-layer
+heterogeneity (gemma3 local:global windows, zamba2 shared-attention points)
+is expressed as scanned per-layer scalars + ``lax.cond``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.attention import attn_apply, attn_init
+from repro.models.layers import Dtypes, dense_init, mlp_apply, mlp_init, rms_norm
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import ssm_apply, ssm_init
+
+__all__ = ["init_lm", "lm_forward", "layer_windows", "HUGE_WINDOW"]
+
+HUGE_WINDOW = 1 << 30  # "no window": (qi - kj) < 2^30 is always true
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg):
+    if cfg.family == "ssm":
+        k1, k2 = jax.random.split(key)
+        return {"ln": jnp.zeros((cfg.d_model,)), "ssm": ssm_init(k1, cfg)}
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(key)
+        return {"ln": jnp.zeros((cfg.d_model,)), "ssm": ssm_init(k1, cfg)}
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "attn": attn_init(k1, cfg),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_lm(cfg, key):
+    ke, ku, kl, ks = jax.random.split(key, 4)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": jax.random.normal(ke, (vp, d), jnp.float32) * d ** -0.5,
+        "final_ln": jnp.zeros((d,)),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(
+            jax.random.split(kl, cfg.n_layers)
+        ),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ku, d, vp)
+    if cfg.family == "hybrid":
+        a1, a2, a3 = jax.random.split(ks, 3)
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((d,)),
+            "ln2": jnp.zeros((d,)),
+            "attn": attn_init(a1, cfg),
+            "mlp": mlp_init(a2, d, cfg.d_ff),
+        }
+    return params
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    """Per-layer attention window (HUGE = full causal)."""
+    win = []
+    for i in range(cfg.n_layers):
+        if cfg.local_global_ratio > 0:
+            win.append(HUGE_WINDOW if cfg.layer_is_global(i)
+                       else cfg.sliding_window)
+        elif cfg.sliding_window is not None:
+            win.append(cfg.sliding_window)
+        else:
+            win.append(HUGE_WINDOW)
+    return jnp.asarray(win, jnp.int32)
+
+
+def attn_flags(cfg) -> jnp.ndarray:
+    """Per-layer flag: apply the shared attention block (hybrid)."""
+    return jnp.asarray(
+        [1 if cfg.layer_is_attn(i) else 0 for i in range(cfg.n_layers)], jnp.int32
+    )
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _shared_block(sp, x, cfg, positions):
+    a = attn_apply(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps), cfg,
+                   positions, window=jnp.int32(
+                       cfg.sliding_window if cfg.sliding_window else HUGE_WINDOW))
+    x = x + shard_act(a, "btd")
+    m = mlp_apply(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps), x.dtype)
+    return x + shard_act(m, "btd")
+
+
+def lm_forward(
+    params,
+    tokens: jax.Array,                     # (B, S_text)
+    cfg,
+    patches: Optional[jax.Array] = None,   # (B, P, D) vlm stub embeddings
+):
+    """Full-sequence forward; returns (logits (B, S, Vp), aux_loss)."""
+    dt = Dtypes.compute(cfg)
+    emb = params["embed"]
+    x = emb[tokens].astype(dt)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(dt), x], axis=1)
+    x = shard_act(x, "btd")
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    windows = layer_windows(cfg)
+    flags = attn_flags(cfg)
+    shared = params.get("shared_attn")
+
+    def body(carry, scanned):
+        x, aux = carry
+        lp, w, flag = scanned
+        if cfg.family in ("ssm", "hybrid"):
+            h = ssm_apply(lp["ssm"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, dt)
+            x = x + shard_act(h, "btd")
+            if cfg.family == "hybrid":
+                x = jax.lax.cond(
+                    flag > 0,
+                    lambda v: _shared_block(shared, v, cfg, positions),
+                    lambda v: v,
+                    x,
+                )
+        else:
+            a = attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                           cfg, positions, window=w)
+            x = x + shard_act(a, "btd")
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                m, aux_l = moe_apply(lp["moe"], h, cfg, dt)
+                aux = aux + aux_l
+            else:
+                m = mlp_apply(lp["mlp"], h, dt)
+            x = x + shard_act(m, "btd")
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], windows, flags), unroll=cfg.scan_unroll or 1,
+    )
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = x @ unemb.astype(dt)
+    return shard_act(logits, "btv"), aux

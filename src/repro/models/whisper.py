@@ -1,0 +1,118 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, D).  Encoder layers are
+bidirectional self-attention + MLP; decoder layers are causal self-attention
++ cross-attention + MLP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.attention import attn_apply, attn_init
+from repro.models.layers import Dtypes, dense_init, mlp_apply, mlp_init, rms_norm
+
+__all__ = ["init_encdec", "encoder_forward", "decoder_forward", "encdec_forward"]
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "attn": attn_init(k1, cfg),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,)),
+        "ln_x": jnp.zeros((cfg.d_model,)),
+        "ln2": jnp.zeros((cfg.d_model,)),
+        "attn": attn_init(k1, cfg),
+        "xattn": attn_init(k3, cfg),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(cfg, key):
+    ke, ku, kenc, kdec = jax.random.split(key, 4)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    return {
+        "embed": jax.random.normal(ke, (vp, d), jnp.float32) * d ** -0.5,
+        "unembed": dense_init(ku, d, vp),
+        "enc_pos": jax.random.normal(kenc, (cfg.encoder_frames, d),
+                                     jnp.float32) * 0.02,
+        "final_ln": jnp.zeros((d,)),
+        "enc_final_ln": jnp.zeros((d,)),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(kenc, cfg.n_encoder_layers)
+        ),
+        "layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(kdec, cfg.n_layers)
+        ),
+    }
+
+
+def encoder_forward(params, frames: jax.Array, cfg):
+    """frames: (B, T_enc, D) stub embeddings -> (B, T_enc, D)."""
+    dt = Dtypes.compute(cfg)
+    x = (frames + params["enc_pos"][None, : frames.shape[1]]).astype(dt)
+    x = shard_act(x, "btd")
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        a = attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                       pos, causal=False, use_rope=False)
+        x = x + shard_act(a, "btd")
+        m = mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), dt)
+        return x + shard_act(m, "btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                       unroll=cfg.scan_unroll or 1)
+    return rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def decoder_forward(params, tokens: jax.Array, enc_out: jax.Array, cfg):
+    """tokens: (B, S); enc_out: (B, T_enc, D) -> logits (B, S, Vp)."""
+    dt = Dtypes.compute(cfg)
+    x = params["embed"][tokens].astype(dt)
+    x = shard_act(x, "btd")
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    enc_out = enc_out.astype(dt)
+
+    def body(x, lp):
+        a = attn_apply(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, pos)
+        x = x + shard_act(a, "btd")
+        c = attn_apply(lp["xattn"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg,
+                       pos, kv_x=enc_out, use_rope=False)
+        x = x + shard_act(c, "btd")
+        m = mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), dt)
+        return x + shard_act(m, "btd"), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                       unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(dt)
+    return shard_act(logits, "btv")
+
+
+def encdec_forward(params, tokens: jax.Array, frames: jax.Array, cfg):
+    enc = encoder_forward(params, frames, cfg)
+    return decoder_forward(params, tokens, enc, cfg), jnp.zeros((), jnp.float32)

@@ -1,0 +1,178 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, elastic.
+
+Layout of a checkpoint directory::
+
+    <dir>/step_000123/
+        manifest.json      # step, config fingerprint, tree structure, shapes
+        arrays.npz         # flat {index -> ndarray}, full (unsharded) values
+    <dir>/LATEST           # atomic pointer file
+
+Design choices for 1000+ node deployments (documented trade-offs):
+
+  * **Atomicity**: writes go to ``step_X.tmp-<pid>`` then ``os.rename`` —
+    a crashed writer never corrupts the pointer; LATEST is rewritten last.
+  * **Async**: ``save_async`` snapshots device arrays to host (blocking only
+    for the device->host copy) and writes in a daemon thread — training
+    continues during serialization (measured overlap in benchmarks).
+  * **Elastic**: checkpoints store *logical* (global-shape) arrays; restore
+    re-shards onto whatever mesh is active — axis sizes may differ between
+    save and load (tested: 8 -> 4 -> 8 CPU devices).
+  * On a real fleet the npz payload would be a per-host shard (tensorstore);
+    the manifest/pointer protocol is identical.  This container is
+    single-host, so full-value npz is the honest equivalent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "config_fingerprint"]
+
+_TMP_COUNTER = itertools.count()
+
+
+def config_fingerprint(cfg) -> str:
+    if dataclasses.is_dataclass(cfg):
+        payload = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    else:
+        payload = repr(cfg)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         fingerprint: str = "") -> Path:
+    """Synchronous atomic checkpoint write."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / (f"step_{step:08d}.tmp-{os.getpid()}"
+                      f"-{next(_TMP_COUNTER)}")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(l) for l in leaves]
+    np.savez(tmp / "arrays.npz", **{str(i): a for i, a in enumerate(host)})
+    manifest = {
+        "step": step,
+        "fingerprint": fingerprint,
+        "treedef": str(treedef),
+        "n_leaves": len(host),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": [str(a.dtype) for a in host],
+        "time": time.time(),
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    ptr_tmp = ckpt_dir / f".LATEST.tmp-{os.getpid()}-{next(_TMP_COUNTER)}"
+    ptr_tmp.write_text(final.name)
+    os.rename(ptr_tmp, ckpt_dir / "LATEST")
+    return final
+
+
+class _AsyncSaver:
+    """Single background writer; at most one outstanding save (newer wins)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    def submit(self, ckpt_dir, step, tree, fingerprint=""):
+        # snapshot to host synchronously (cheap vs serialization)
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(l) for l in leaves]
+        snapshot = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            save(ckpt_dir, step, snapshot, fingerprint)
+
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                self._thread.join()  # backpressure: never queue > 1
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        with self._lock:
+            if self._thread is not None:
+                self._thread.join()
+
+
+_SAVER = _AsyncSaver()
+
+
+def save_async(ckpt_dir, step, tree, fingerprint=""):
+    _SAVER.submit(ckpt_dir, step, tree, fingerprint)
+
+
+def wait_for_saves():
+    _SAVER.wait()
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ptr = Path(ckpt_dir) / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (Path(ckpt_dir) / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, like: Any, step: Optional[int] = None,
+            shardings: Any = None, expect_fingerprint: str = ""):
+    """Restore into the structure of ``like``; re-shard via ``shardings``.
+
+    ``shardings`` (optional) is a pytree of NamedSharding matching ``like``
+    — this is the elastic path: the stored global arrays are placed onto the
+    *current* mesh regardless of the mesh they were saved from.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    if expect_fingerprint and manifest["fingerprint"] != expect_fingerprint:
+        raise ValueError(
+            f"checkpoint fingerprint {manifest['fingerprint']} != expected "
+            f"{expect_fingerprint} — refusing to load a mismatched config"
+        )
+    data = np.load(d / "arrays.npz")
+    leaves, treedef = _flatten(like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError("checkpoint structure mismatch")
+    out = []
+    for i, ref in enumerate(leaves):
+        a = data[str(i)]
+        if tuple(a.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {a.shape} != {ref.shape}")
+        out.append(a)
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    else:
+        restored = jax.tree_util.tree_map(jax.numpy.asarray, restored)
+    return restored, step

@@ -1,0 +1,358 @@
+"""Serving: prefill (build KV/SSM caches from context) and single-token
+decode steps for every architecture family.
+
+Cache layouts (all stacked over layers for scan):
+  dense/moe/vlm : KVCache (L, B, W, Hkv, Dh); W = full context, or a
+                  sliding-window ring buffer for pure-SWA archs (mixtral).
+  ssm           : SSMCache (L, ...) — O(1) state per layer, any context len.
+  hybrid        : SSMCache (L, ...) + KVCache (n_attn_points, ...) for the
+                  shared attention block applications.
+  audio (enc-dec): decoder self-attn KVCache (L, ...) + precomputed
+                  cross-attention K/V from the encoder output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.attention import KVCache, attn_apply, attn_decode, init_cache
+from repro.models.layers import Dtypes, mlp_apply, rms_norm, rope
+from repro.models.moe import moe_apply
+from repro.models.ssm import SSMCache, init_ssm_cache, ssm_apply, ssm_decode
+from repro.models.transformer import HUGE_WINDOW, attn_flags, layer_windows
+from repro.models.whisper import encoder_forward
+
+__all__ = ["DecodeState", "init_state", "prefill", "decode_step",
+           "DECODE_SLACK"]
+
+# non-ring caches reserve this many slots beyond the prefilled context
+DECODE_SLACK = 16
+
+
+def _finalize_kv(ks, vs, s: int, ring: bool, window: int | None):
+    """Lay out prefilled K/V for decoding.
+
+    ring:  keep the last ``window`` tokens, *rolled* so token t sits at slot
+           t %% window (what attn_decode's ring indexing expects).
+    else:  pad ``DECODE_SLACK`` empty slots for upcoming tokens.
+    """
+    if ring:
+        w = min(s, window)
+        ks, vs = ks[:, :, -w:], vs[:, :, -w:]
+        shift = s % w
+        if shift:
+            ks = jnp.roll(ks, shift, axis=2)
+            vs = jnp.roll(vs, shift, axis=2)
+        return ks, vs
+    pad = [(0, 0), (0, 0), (0, DECODE_SLACK), (0, 0), (0, 0)]
+    return jnp.pad(ks, pad), jnp.pad(vs, pad)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DecodeState:
+    kv: Optional[KVCache] = None        # stacked over layers
+    ssm: Optional[SSMCache] = None      # stacked over layers
+    shared_kv: Optional[KVCache] = None  # hybrid: stacked over attn points
+    cross_k: Optional[jax.Array] = None  # (L, B, Tenc, Hkv, Dh)
+    cross_v: Optional[jax.Array] = None
+
+
+def _stack(items):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+
+
+def _n_attn_points(cfg) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.layer_is_attn(i))
+
+
+def init_state(cfg, batch: int, max_len: int) -> DecodeState:
+    dt = Dtypes.compute(cfg)
+    fam = cfg.family
+    if fam == "ssm":
+        return DecodeState(
+            ssm=_stack([init_ssm_cache(cfg, batch, dt)] * cfg.n_layers))
+    if fam == "hybrid":
+        n_attn = _n_attn_points(cfg)
+        # long contexts use the sliding window for the shared block (SWA)
+        return DecodeState(
+            ssm=_stack([init_ssm_cache(cfg, batch, dt)] * cfg.n_layers),
+            shared_kv=_stack([init_cache(cfg, batch, max_len, dt)] * n_attn),
+        )
+    if fam == "audio":
+        b = batch
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        return DecodeState(
+            kv=_stack([init_cache(cfg, batch, max_len, dt)] * cfg.n_layers),
+            cross_k=jnp.zeros((cfg.n_layers, b, cfg.encoder_frames, hkv, hd), dt),
+            cross_v=jnp.zeros((cfg.n_layers, b, cfg.encoder_frames, hkv, hd), dt),
+        )
+    return DecodeState(
+        kv=_stack([init_cache(cfg, batch, max_len, dt)] * cfg.n_layers))
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def prefill(params, tokens: jax.Array, cfg,
+            patches: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None):
+    """Run the context through the model, building caches.
+
+    Returns (last-position logits (B, Vp), DecodeState).
+    """
+    dt = Dtypes.compute(cfg)
+    fam = cfg.family
+
+    if fam == "audio":
+        return _prefill_audio(params, tokens, frames, cfg, dt)
+
+    x = params["embed"][tokens].astype(dt)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(dt), x], axis=1)
+    x = shard_act(x, "btd")
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    windows = layer_windows(cfg)
+
+    if fam in ("ssm", "hybrid"):
+        return _prefill_ssm(params, x, pos, cfg, dt)
+
+    def body(x, scanned):
+        lp, w = scanned
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        # attention that also emits this layer's K/V for the cache
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        k = (h @ lp["attn"]["w_k"].astype(dt)).reshape(b, s, hkv, hd)
+        v = (h @ lp["attn"]["w_v"].astype(dt)).reshape(b, s, hkv, hd)
+        _, k = rope(k, k, pos, cfg.rope_theta)  # rope on k only
+        a = attn_apply(lp["attn"], h, cfg, pos, window=w)
+        x = x + shard_act(a, "btd")
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            m, _ = moe_apply(lp["moe"], h2, cfg, dt)
+        else:
+            m = mlp_apply(lp["mlp"], h2, dt)
+        x = x + shard_act(m, "btd")
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows),
+                               unroll=cfg.scan_unroll or 1)
+
+    ring = cfg.sliding_window is not None and cfg.local_global_ratio == 0
+    ks, vs = _finalize_kv(ks, vs, s, ring, cfg.sliding_window)
+    state = DecodeState(kv=KVCache(
+        k=ks, v=vs, pos=jnp.full((cfg.n_layers,), s, jnp.int32), ring=ring))
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x[:, -1] @ unemb.astype(dt))
+    return logits, state
+
+
+def _prefill_ssm(params, x, pos, cfg, dt):
+    b = x.shape[0]
+    shared = params.get("shared_attn")
+    flags = attn_flags(cfg)
+    n_attn = _n_attn_points(cfg)
+
+    shared_ks, shared_vs = [], []
+
+    def run(x):
+        caches = []
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            h = rms_norm(x, lp["ln"], cfg.norm_eps)
+            out, hf = ssm_apply(lp["ssm"], h, cfg, dt, return_state=True)
+            x = x + shard_act(out, "btd")
+            # conv cache: last K-1 pre-conv channel inputs
+            proj = h @ lp["ssm"]["in_proj"].astype(dt)
+            di = cfg.d_inner
+            gn = cfg.ssm_groups * cfg.ssm_state
+            xbc = proj[..., di : di + di + 2 * gn]
+            caches.append(SSMCache(conv=xbc[:, -(cfg.ssm_conv - 1):], state=hf))
+            if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+                sh = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+                s = x.shape[1]
+                k = (sh @ shared["attn"]["w_k"].astype(dt)).reshape(b, s, hkv, hd)
+                v = (sh @ shared["attn"]["w_v"].astype(dt)).reshape(b, s, hkv, hd)
+                _, k = rope(k, k, pos, cfg.rope_theta)
+                kvs.append((k, v))
+                w = jnp.int32(cfg.sliding_window or HUGE_WINDOW)
+                a = attn_apply(shared["attn"], sh, cfg, pos, window=w)
+                x2 = x + shard_act(a, "btd")
+                m = mlp_apply(shared["mlp"],
+                              rms_norm(x2, shared["ln2"], cfg.norm_eps), dt)
+                x = x2 + shard_act(m, "btd")
+        return x, caches, kvs
+
+    x, caches, kvs = run(x)
+    s = x.shape[1]
+    state_kw = dict(ssm=_stack(caches))
+    if cfg.family == "hybrid" and n_attn:
+        ks = jnp.stack([k for k, _ in kvs])
+        vs = jnp.stack([v for _, v in kvs])
+        ring = cfg.sliding_window is not None
+        ks, vs = _finalize_kv(ks, vs, s, ring, cfg.sliding_window)
+        state_kw["shared_kv"] = KVCache(
+            k=ks, v=vs, pos=jnp.full((n_attn,), s, jnp.int32), ring=ring)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x[:, -1] @ unemb.astype(dt), DecodeState(**state_kw)
+
+
+def _prefill_audio(params, tokens, frames, cfg, dt):
+    from repro.models.whisper import decoder_forward
+
+    enc = encoder_forward(params, frames, cfg)
+    b, s = tokens.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        k = (h @ lp["attn"]["w_k"].astype(dt)).reshape(b, s, hkv, hd)
+        v = (h @ lp["attn"]["w_v"].astype(dt)).reshape(b, s, hkv, hd)
+        _, k = rope(k, k, pos, cfg.rope_theta)
+        a = attn_apply(lp["attn"], h, cfg, pos)
+        x = x + a
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        ck = (enc @ lp["xattn"]["w_k"].astype(dt)).reshape(
+            b, enc.shape[1], hkv, hd)
+        cv = (enc @ lp["xattn"]["w_v"].astype(dt)).reshape(
+            b, enc.shape[1], hkv, hd)
+        c = attn_apply(lp["xattn"], hx, cfg, pos, kv_x=enc, use_rope=False)
+        x = x + c
+        m = mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), dt)
+        return x + m, (k, v, ck, cv)
+
+    x = params["embed"][tokens].astype(dt)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, (ks, vs, cks, cvs) = jax.lax.scan(
+        body, x, params["layers"], unroll=cfg.scan_unroll or 1)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x[:, -1] @ params["unembed"].astype(dt)
+    ks, vs = _finalize_kv(ks, vs, s, False, None)
+    state = DecodeState(
+        kv=KVCache(k=ks, v=vs, pos=jnp.full((cfg.n_layers,), s, jnp.int32),
+                   ring=False),
+        cross_k=cks, cross_v=cvs,
+    )
+    return logits, state
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode_step(params, token: jax.Array, state: DecodeState, cfg):
+    """token: (B, 1) -> (logits (B, Vp), new DecodeState)."""
+    dt = Dtypes.compute(cfg)
+    fam = cfg.family
+    x = params["embed"][token].astype(dt)  # (B, 1, D)
+
+    if fam in ("ssm", "hybrid"):
+        x, new_state = _decode_ssm(params, x, state, cfg, dt)
+    elif fam == "audio":
+        x, new_state = _decode_audio(params, x, state, cfg, dt)
+    else:
+        x, new_state = _decode_attn(params, x, state, cfg, dt)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return (x[:, 0] @ unemb.astype(dt)), new_state
+
+
+def _decode_attn(params, x, state, cfg, dt):
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        lp, cache, w = scanned
+        a, new_cache = attn_decode(
+            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cache, cfg,
+            window=w)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            m, _ = moe_apply(lp["moe"], h, cfg, dt)
+        else:
+            m = mlp_apply(lp["mlp"], h, dt)
+        return x + m, new_cache
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], state.kv, windows),
+                             unroll=cfg.scan_unroll or 1)
+    return x, DecodeState(kv=new_kv, cross_k=state.cross_k,
+                          cross_v=state.cross_v)
+
+
+def _decode_ssm(params, x, state, cfg, dt):
+    shared = params.get("shared_attn")
+    new_ssm, new_shared = [], []
+    attn_pt = 0
+    for i in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        cache = jax.tree_util.tree_map(lambda a: a[i], state.ssm)
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, c2 = ssm_decode(lp["ssm"], h, cache, cfg, dt)
+        x = x + out
+        new_ssm.append(c2)
+        if cfg.family == "hybrid" and cfg.layer_is_attn(i):
+            kv = jax.tree_util.tree_map(lambda a: a[attn_pt], state.shared_kv)
+            kv = KVCache(k=kv.k, v=kv.v, pos=kv.pos, ring=state.shared_kv.ring)
+            a, kv2 = attn_decode(
+                shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps), kv,
+                cfg, window=jnp.int32(cfg.sliding_window or HUGE_WINDOW))
+            x2 = x + a
+            m = mlp_apply(shared["mlp"],
+                          rms_norm(x2, shared["ln2"], cfg.norm_eps), dt)
+            x = x2 + m
+            new_shared.append(kv2)
+            attn_pt += 1
+    new_state = DecodeState(
+        ssm=_stack(new_ssm),
+        shared_kv=_stack(new_shared) if new_shared else None,
+    )
+    return x, new_state
+
+
+def _decode_audio(params, x, state, cfg, dt):
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    b = x.shape[0]
+
+    def body(x, scanned):
+        lp, cache, ck, cv = scanned
+        a, new_cache = attn_decode(
+            lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cache, cfg)
+        x = x + a
+        # cross attention against precomputed encoder K/V
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q = (h @ lp["xattn"]["w_q"].astype(dt)).reshape(b, 1, hq, hd)
+        rep = hq // hkv
+        kk = jnp.repeat(ck, rep, axis=2)
+        vv = jnp.repeat(cv, rep, axis=2)
+        lg = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / (hd ** 0.5)
+        p = jax.nn.softmax(lg.astype(jnp.float32), -1).astype(dt)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vv).reshape(b, 1, hq * hd)
+        x = x + o @ lp["xattn"]["w_o"].astype(dt)
+        m = mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), dt)
+        return x + m, new_cache
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["layers"], state.kv, state.cross_k, state.cross_v),
+        unroll=cfg.scan_unroll or 1)
+    return x, DecodeState(kv=new_kv, cross_k=state.cross_k,
+                          cross_v=state.cross_v)

@@ -1,0 +1,117 @@
+"""Train step: next-token cross-entropy, microbatched gradient accumulation
+(compute/comm overlap: the gradient all-reduce is deferred to the end of the
+accumulation loop), mixed precision, optional chunked-vocab loss."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import lm_forward
+from repro.models.whisper import encdec_forward
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+__all__ = ["TrainState", "init_train_state", "make_train_step", "lm_loss"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(params, opt_cfg: AdamWConfig) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _ce(logits: jax.Array, labels: jax.Array, vocab: int,
+        chunked: int = 0) -> jax.Array:
+    """Mean next-token CE.  ``chunked``>0 scans over sequence chunks so the
+    (B, S, V) f32 softmax intermediate never materializes at once."""
+    if chunked:
+        b, s, v = logits.shape
+        nc = s // chunked
+
+        def body(acc, i):
+            lg = jax.lax.dynamic_slice_in_dim(logits, i * chunked, chunked, 1)
+            lb = jax.lax.dynamic_slice_in_dim(labels, i * chunked, chunked, 1)
+            ls = jax.nn.log_softmax(lg.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(ls, lb[..., None], -1).sum()
+            return acc + nll, None
+
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+        return tot / (b * s)
+    ls = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(ls, labels[..., None], -1)
+    return nll.mean()
+
+
+def lm_loss(params, batch: dict, cfg, aux_weight: float = 0.01,
+            chunked_ce: int = 0):
+    """batch: {"tokens": (B, S+1)} (+ optional "patches"/"frames")."""
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    if cfg.family == "audio":
+        logits, aux = encdec_forward(params, inp, batch["frames"], cfg)
+    elif cfg.family == "vlm":
+        logits, aux = lm_forward(params, inp, cfg, patches=batch["patches"])
+        logits = logits[:, cfg.n_patches:]          # score text positions only
+    else:
+        logits, aux = lm_forward(params, inp, cfg)
+    loss = _ce(logits, labels, cfg.padded_vocab, chunked=chunked_ce)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, n_microbatches: int = 1,
+                    chunked_ce: int = 0):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``n_microbatches > 1`` the global batch is split and gradients are
+    accumulated in f32; the (FSDP/DP) gradient reduction happens once, after
+    the loop — this is the compute/comm overlap knob measured in §Perf.
+    """
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, chunked_ce=chunked_ce)
+
+    def train_step(state: TrainState, batch: dict):
+        if n_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def micro(i):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(n_microbatches,
+                                        x.shape[0] // n_microbatches,
+                                        *x.shape[1:])[i],
+                    batch,
+                )
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, micro(i))
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(n_microbatches))
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    return train_step

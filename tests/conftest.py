@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py forces 512
+placeholder devices (in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_clusters(rng, n, d, n_classes=2, spread=1.0, sep=6.0):
+    """Well-separated Gaussian clusters with labels."""
+    labels = rng.randint(0, n_classes, size=n)
+    centers = rng.randn(n_classes, d) * sep
+    x = centers[labels] + rng.randn(n, d) * spread
+    return x.astype(np.float32), labels

@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one prefill/decode step on CPU; asserts shapes and finiteness."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models.transformer import init_lm, lm_forward
+from repro.models.whisper import encdec_forward, init_encdec
+from repro.serving.decode import decode_step, init_state, prefill
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, lm_loss, make_train_step
+
+B, S = 2, 32
+
+
+def _init(cfg, key):
+    if cfg.family == "audio":
+        return init_encdec(cfg, key)
+    return init_lm(cfg, key)
+
+
+def _batch(cfg, rng, seq=S):
+    batch = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, size=(B, seq + 1)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.randn(B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.randn(B, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = _init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    inp = batch["tokens"][:, :-1]
+    if cfg.family == "audio":
+        logits, aux = encdec_forward(params, inp, batch["frames"], cfg)
+        want_s = S
+    elif cfg.family == "vlm":
+        logits, aux = lm_forward(params, inp, cfg, patches=batch["patches"])
+        want_s = S + cfg.n_patches
+    else:
+        logits, aux = lm_forward(params, inp, cfg)
+        want_s = S
+    assert logits.shape == (B, want_s, cfg.padded_vocab), logits.shape
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_reduces_nothing_nan(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = _init(cfg, jax.random.PRNGKey(1))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_train_state(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg, rng)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    assert int(state.step) == 1
+    # params actually changed
+    leaves0 = jax.tree_util.tree_leaves(params)
+    leaves1 = jax.tree_util.tree_leaves(state.params)
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(leaves0, leaves1)
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, rng):
+    """Decode after prefill must produce logits close to the full forward
+    pass at the same position (cache correctness)."""
+    cfg = get_smoke_config(arch)
+    params = _init(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg, rng)
+    tokens = batch["tokens"]  # (B, S+1)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patches"] = batch["patches"]
+    if cfg.family == "audio":
+        kwargs["frames"] = batch["frames"]
+
+    # prefill on S tokens, then decode token S
+    logits_pre, state = prefill(params, tokens[:, :S], cfg, **kwargs)
+    logits_dec, state2 = decode_step(params, tokens[:, S:S + 1], state, cfg)
+
+    # full forward on S+1 tokens: position S-1 should match prefill's last,
+    # position S should match decode's output
+    inp = tokens
+    if cfg.family == "audio":
+        full, _ = encdec_forward(params, inp, batch["frames"], cfg)
+        off = 0
+    elif cfg.family == "vlm":
+        full, _ = lm_forward(params, inp, cfg, patches=batch["patches"])
+        off = cfg.n_patches
+    else:
+        full, _ = lm_forward(params, inp, cfg)
+        off = 0
+
+    ref_pre = np.asarray(full[:, off + S - 1], np.float32)
+    got_pre = np.asarray(logits_pre, np.float32)
+    np.testing.assert_allclose(got_pre, ref_pre, rtol=0.15, atol=0.15)
+
+    ref_dec = np.asarray(full[:, off + S], np.float32)
+    got_dec = np.asarray(logits_dec, np.float32)
+    np.testing.assert_allclose(got_dec, ref_dec, rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_metadata(arch):
+    """Full configs must match the assignment table exactly."""
+    cfg = get_config(arch)
+    table = {
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "mamba2-130m": (24, 768, 12, 12, 0, 50280),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    }
+    l, d, h, kv, f, v = table[arch]
+    assert cfg.n_layers == l and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == f and cfg.vocab_size == v
+    if arch == "deepseek-moe-16b":
+        assert cfg.n_experts == 64 and cfg.experts_per_token == 6
+        assert cfg.n_shared_experts == 2
+    if arch == "mixtral-8x7b":
+        assert cfg.n_experts == 8 and cfg.experts_per_token == 2
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+    if arch == "mamba2-130m":
+        assert cfg.ssm_state == 128
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: derived parameter counts are in the ballpark of the names."""
+    expect = {
+        "gemma3-1b": (0.7e9, 1.6e9),
+        "internlm2-1.8b": (1.4e9, 2.4e9),
+        "glm4-9b": (8e9, 11e9),
+        "smollm-360m": (0.25e9, 0.5e9),
+        "zamba2-1.2b": (0.8e9, 1.7e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "mixtral-8x7b": (42e9, 50e9),
+        "mamba2-130m": (0.1e9, 0.22e9),
+        # our whisper uses the framework-uniform gated MLP (3 mats vs 2) and
+        # untied embeddings -> ~1.0B vs the 769M reference; dims/L/H match
+        # the assignment table exactly (noted in DESIGN.md §5)
+        "whisper-medium": (0.8e9, 1.15e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

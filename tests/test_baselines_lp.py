@@ -1,0 +1,126 @@
+"""Exact / kNN baselines and end-to-end Label Propagation behaviour."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+sys.path.insert(0, str(Path(__file__).parent))
+from conftest import make_clusters
+
+from repro.core.baselines import (
+    build_knn_graph,
+    exact_transition_matrix,
+    knn_matvec,
+    streaming_exact_matvec,
+)
+from repro.core.label_prop import ccr, label_propagate, one_hot_labels
+from repro.core.vdt import VariationalDualTree
+
+
+def test_exact_p_row_stochastic(rng):
+    x = rng.randn(30, 4).astype(np.float32)
+    p = np.asarray(exact_transition_matrix(jnp.asarray(x), jnp.asarray(1.0)))
+    np.testing.assert_allclose(p.sum(1), np.ones(30), rtol=1e-5)
+    assert np.all(np.diagonal(p) == 0)
+    assert np.all(p >= 0)
+
+
+def test_streaming_matvec_matches_dense(rng):
+    n, d, c = 67, 5, 3
+    x = rng.randn(n, d).astype(np.float32)
+    y = rng.randn(n, c).astype(np.float32)
+    sigma = jnp.asarray(0.8)
+    p = np.asarray(exact_transition_matrix(jnp.asarray(x), sigma))
+    out = np.asarray(streaming_exact_matvec(jnp.asarray(x), jnp.asarray(y),
+                                            sigma, block=16))
+    np.testing.assert_allclose(out, p @ y, rtol=1e-4, atol=1e-5)
+
+
+def test_knn_graph_correct_neighbours(rng):
+    n, k = 40, 5
+    x = rng.randn(n, 3).astype(np.float32)
+    g = build_knn_graph(jnp.asarray(x), k, jnp.asarray(1.0), block=16)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    for i in range(n):
+        want = set(np.argsort(d2[i])[:k].tolist())
+        got = set(np.asarray(g.indices[i]).tolist())
+        # ties can permute equal-distance neighbours; compare distances
+        dw = sorted(d2[i][list(want)])
+        dg = sorted(d2[i][list(got)])
+        np.testing.assert_allclose(dg, dw, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g.weights).sum(1), np.ones(n), rtol=1e-5)
+
+
+def test_knn_matvec_matches_dense_sparse(rng):
+    n, k, c = 25, 4, 2
+    x = rng.randn(n, 3).astype(np.float32)
+    g = build_knn_graph(jnp.asarray(x), k, jnp.asarray(1.0), block=8)
+    y = rng.randn(n, c).astype(np.float32)
+    dense = np.zeros((n, n))
+    idx = np.asarray(g.indices); w = np.asarray(g.weights)
+    for i in range(n):
+        dense[i, idx[i]] = w[i]
+    out = np.asarray(knn_matvec(g, jnp.asarray(y)))
+    np.testing.assert_allclose(out, dense @ y, rtol=1e-4, atol=1e-6)
+
+
+def _lp_ccr(matvec, labels, labeled_mask, n_classes, alpha=0.05, iters=200):
+    y0 = one_hot_labels(labels, labeled_mask, n_classes)
+    yf = label_propagate(matvec, y0, alpha=alpha, n_iters=iters)
+    return ccr(yf, labels, ~labeled_mask)
+
+
+def test_label_propagation_separated_clusters(rng):
+    """All three backends must classify well-separated clusters near-perfectly
+    with 10% labels — the paper's qualitative Figure 2C claim."""
+    n, d = 128, 4
+    x, labels = make_clusters(rng, n, d, n_classes=2, sep=8.0)
+    labeled = np.zeros(n, bool)
+    labeled[rng.choice(n, n // 10, replace=False)] = True
+
+    # VDT
+    vdt = VariationalDualTree.fit(x, max_blocks=6 * n)
+    acc_vdt = _lp_ccr(vdt.matvec, labels, labeled, 2)
+
+    # exact
+    p = exact_transition_matrix(jnp.asarray(x), jnp.asarray(vdt.sigma))
+    acc_exact = _lp_ccr(lambda y: p @ y, labels, labeled, 2)
+
+    # kNN
+    g = build_knn_graph(jnp.asarray(x), 8, jnp.asarray(vdt.sigma))
+    acc_knn = _lp_ccr(lambda y: knn_matvec(g, y), labels, labeled, 2)
+
+    assert acc_exact > 0.95, acc_exact
+    assert acc_vdt > 0.9, acc_vdt
+    assert acc_knn > 0.9, acc_knn
+
+
+def test_vdt_close_to_exact_on_moderate_data(rng):
+    """VDT CCR should be within a few points of exact CCR (paper Fig. 2C)."""
+    n = 96
+    x, labels = make_clusters(rng, n, 6, n_classes=3, sep=5.0, spread=1.2)
+    labeled = np.zeros(n, bool)
+    labeled[rng.choice(n, max(6, n // 10), replace=False)] = True
+    vdt = VariationalDualTree.fit(x, max_blocks=8 * n)
+    p = exact_transition_matrix(jnp.asarray(x), jnp.asarray(vdt.sigma))
+    acc_vdt = _lp_ccr(vdt.matvec, labels, labeled, 3)
+    acc_exact = _lp_ccr(lambda y: p @ y, labels, labeled, 3)
+    assert acc_vdt >= acc_exact - 0.15, (acc_vdt, acc_exact)
+
+
+def test_lp_fixed_point_property(rng):
+    """LP converges toward the fixed point Y* = (1-a)(I - a Q)^-1 Y0."""
+    n = 32
+    x, labels = make_clusters(rng, n, 3, sep=6.0)
+    labeled = np.zeros(n, bool); labeled[:6] = True
+    vdt = VariationalDualTree.fit(x)
+    y0 = np.asarray(one_hot_labels(labels, labeled, 2))
+    q = vdt.dense_q()
+    alpha = 0.1
+    y_star = (1 - alpha) * np.linalg.solve(np.eye(n) - alpha * q, y0)
+    yf = np.asarray(vdt.label_propagate(y0, alpha=alpha, n_iters=300))
+    np.testing.assert_allclose(yf, y_star, rtol=1e-3, atol=1e-4)

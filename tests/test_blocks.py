@@ -1,0 +1,92 @@
+"""Block-partition invariants: validity, coarsest structure, mirrors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.blocks import (
+    coarsest_partition,
+    densify_q,
+    mirror_invariant_ok,
+    validate_partition,
+)
+from repro.core.qopt import optimize_q
+from repro.core.refine import refine_to_budget
+from repro.core.sigma import sigma_init
+from repro.core.tree import build_tree
+
+
+@pytest.mark.parametrize("n", [4, 7, 16, 33, 61])
+def test_coarsest_partition_valid(rng, n):
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    assert validate_partition(bp, tree)
+    assert mirror_invariant_ok(bp)
+
+
+def test_coarsest_block_count_power_of_two(rng):
+    """No ghosts: |B_c| = 2(Np - 1) exactly (paper §4.4)."""
+    n = 32
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    assert bp.n_active == 2 * (n - 1)
+
+
+def test_blocks_disjoint_sides(rng):
+    x = rng.randn(24, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    from repro.core.tree import leaf_range
+
+    for i in range(bp.n):
+        if not bp.active[i]:
+            continue
+        la = leaf_range(int(bp.a[i]), tree.L)
+        lb = leaf_range(int(bp.b[i]), tree.L)
+        assert la[1] <= lb[0] or lb[1] <= la[0]  # A ∩ B = ∅
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=40),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_partition_validity_hypothesis(n, seed):
+    r = np.random.RandomState(seed)
+    x = r.randn(n, 4).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    assert validate_partition(bp, tree)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=24),
+    budget_mult=st.integers(min_value=2, max_value=5),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_partition_stays_valid_under_refinement(n, budget_mult, seed):
+    """Refinement must preserve exact single-coverage of all real pairs."""
+    r = np.random.RandomState(seed)
+    x = r.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree, cap=16 * n * n)
+    sigma = sigma_init(x)
+    refine_to_budget(bp, tree, sigma, max_blocks=budget_mult * bp.n_active, batch=7)
+    assert validate_partition(bp, tree)
+
+
+def test_densify_row_stochastic(rng):
+    n = 19
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                    jnp.asarray(bp.active), jnp.asarray(1.0))
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    dense = densify_q(bp, tree, q)
+    np.testing.assert_allclose(dense.sum(1), np.ones(n), rtol=1e-5)
+    assert np.all(np.diagonal(dense) == 0)

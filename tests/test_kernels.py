@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.fused_lp import fused_lp_matvec, fused_lp_matvec_dense_ref
+from repro.kernels.pairwise import pairwise_sq_dists, pairwise_sq_dists_ref
+
+
+# --------------------------------------------------------------- pairwise
+@pytest.mark.parametrize("m,n,d", [(8, 8, 4), (100, 64, 7), (257, 129, 16),
+                                   (64, 300, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_matches_ref(rng, m, n, d, dtype):
+    x = jnp.asarray(rng.randn(m, d), dtype)
+    y = jnp.asarray(rng.randn(n, d), dtype)
+    got = pairwise_sq_dists(x, y, block_m=64, block_n=64)
+    want = pairwise_sq_dists_ref(x, y)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_pairwise_zero_diag_when_same(rng):
+    x = jnp.asarray(rng.randn(40, 5), jnp.float32)
+    d2 = pairwise_sq_dists(x, x, block_m=32, block_n=32)
+    assert np.allclose(np.diagonal(np.asarray(d2)), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------- fused_lp
+@pytest.mark.parametrize("n,d,c,sigma", [
+    (32, 4, 2, 1.0), (100, 8, 3, 0.5), (130, 5, 1, 2.0), (64, 16, 7, 1.0),
+])
+def test_fused_lp_matches_dense(rng, n, d, c, sigma):
+    x = jnp.asarray(rng.randn(n, d), jnp.float32)
+    y = jnp.asarray(rng.randn(n, c), jnp.float32)
+    got = fused_lp_matvec(x, y, sigma, block_m=32, block_n=32)
+    want = fused_lp_matvec_dense_ref(x, y, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_fused_lp_extreme_sigma(rng):
+    """Online softmax must stay stable for tiny bandwidths (huge logits)."""
+    x = jnp.asarray(rng.randn(48, 3), jnp.float32)
+    y = jnp.asarray(rng.randn(48, 2), jnp.float32)
+    for sigma in (0.05, 10.0):
+        got = np.asarray(fused_lp_matvec(x, y, sigma, block_m=16, block_n=16))
+        want = np.asarray(fused_lp_matvec_dense_ref(x, y, sigma))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_fused_lp_row_stochastic_action(rng):
+    """P is row-stochastic: P @ 1 == 1 exactly through the kernel."""
+    x = jnp.asarray(rng.randn(70, 6), jnp.float32)
+    ones = jnp.ones((70, 1), jnp.float32)
+    got = np.asarray(fused_lp_matvec(x, ones, 1.0, block_m=32, block_n=32))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 2, 2, 64, 16), (2, 4, 2, 96, 32), (1, 8, 1, 128, 16), (2, 3, 1, 65, 8),
+])
+def test_flash_attention_causal(rng, b, hq, hkv, s, d):
+    q = jnp.asarray(rng.randn(b, hq, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hkv, s, d), jnp.float32)
+    got = flash_attention(q, k, v, block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_sliding_window(rng, window):
+    b, h, s, d = 1, 2, 128, 16
+    q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(rng, dtype):
+    b, h, s, d = 1, 2, 64, 32
+    q = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    k = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    v = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    got = np.asarray(flash_attention(q, k, v, block_q=32, block_k=32),
+                     np.float32)
+    want = np.asarray(flash_attention_ref(q, k, v), np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_matches_model_attention(rng):
+    """The kernel agrees with the model's attn_apply (no rope, causal)."""
+    from repro.models.attention import attn_apply
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                      head_dim=16)
+    b, s = 2, 64
+    x = jnp.asarray(rng.randn(b, s, 64), jnp.float32)
+    params = {
+        "w_q": jnp.asarray(rng.randn(64, 64), jnp.float32) * 0.1,
+        "w_k": jnp.asarray(rng.randn(64, 32), jnp.float32) * 0.1,
+        "w_v": jnp.asarray(rng.randn(64, 32), jnp.float32) * 0.1,
+        "w_o": jnp.eye(64, dtype=jnp.float32),
+    }
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ref_out = attn_apply(params, x, cfg, pos, use_rope=False)
+
+    q = (x @ params["w_q"]).reshape(b, s, 4, 16).transpose(0, 2, 1, 3)
+    k = (x @ params["w_k"]).reshape(b, s, 2, 16).transpose(0, 2, 1, 3)
+    v = (x @ params["w_v"]).reshape(b, s, 2, 16).transpose(0, 2, 1, 3)
+    o = flash_attention(q, k, v, block_q=32, block_k=32)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, 64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref_out),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,83 @@
+"""Matvec (Algorithm 1) must agree exactly with the densified block matrix."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.blocks import coarsest_partition, densify_q
+from repro.core.matvec import mpt_matvec
+from repro.core.qopt import optimize_q
+from repro.core.refine import refine_to_budget
+from repro.core.sigma import sigma_init
+from repro.core.tree import build_tree
+
+
+def _setup(rng_or_seed, n, d, sigma=1.0, refine_mult=0):
+    r = (np.random.RandomState(rng_or_seed)
+         if isinstance(rng_or_seed, int) else rng_or_seed)
+    x = r.randn(n, d).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree, cap=8 * max(n, 8) * 4)
+    sig = jnp.asarray(sigma, jnp.float32)
+    if refine_mult:
+        qs, sig = refine_to_budget(bp, tree, sig, refine_mult * bp.n_active, batch=8)
+    else:
+        qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                        jnp.asarray(bp.active), sig)
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    dense = densify_q(bp, tree, q)
+    return x, tree, bp, qs, dense, r
+
+
+@pytest.mark.parametrize("n,d,c", [(8, 2, 1), (23, 4, 3), (64, 3, 5), (33, 5, 2)])
+def test_matvec_matches_dense(n, d, c):
+    x, tree, bp, qs, dense, r = _setup(n * 7 + d, n, d)
+    y = r.randn(n, c).astype(np.float32)
+    out = mpt_matvec(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                     jnp.asarray(bp.active), qs.log_q, y)
+    np.testing.assert_allclose(np.asarray(out), dense @ y, rtol=1e-4, atol=1e-5)
+
+
+def test_matvec_matches_dense_after_refinement():
+    x, tree, bp, qs, dense, r = _setup(3, 30, 4, refine_mult=3)
+    y = r.randn(30, 2).astype(np.float32)
+    out = mpt_matvec(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                     jnp.asarray(bp.active), qs.log_q, y)
+    np.testing.assert_allclose(np.asarray(out), dense @ y, rtol=1e-4, atol=1e-5)
+
+
+def test_matvec_1d_vector():
+    x, tree, bp, qs, dense, r = _setup(11, 17, 3)
+    y = r.randn(17).astype(np.float32)
+    out = mpt_matvec(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                     jnp.asarray(bp.active), qs.log_q, y)
+    assert out.shape == (17,)
+    np.testing.assert_allclose(np.asarray(out), dense @ y, rtol=1e-4, atol=1e-5)
+
+
+def test_matvec_preserves_constant_vector():
+    """Q is row-stochastic => Q @ 1 = 1."""
+    x, tree, bp, qs, dense, r = _setup(5, 40, 3)
+    ones = np.ones((40, 1), np.float32)
+    out = mpt_matvec(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                     jnp.asarray(bp.active), qs.log_q, ones)
+    np.testing.assert_allclose(np.asarray(out), ones, rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=40),
+    c=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_matvec_linear_and_correct_hypothesis(n, c, seed):
+    x, tree, bp, qs, dense, r = _setup(seed % 1000, n, 3)
+    y1 = r.randn(n, c).astype(np.float32)
+    y2 = r.randn(n, c).astype(np.float32)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    o1 = np.asarray(mpt_matvec(tree, a, b, act, qs.log_q, y1))
+    o2 = np.asarray(mpt_matvec(tree, a, b, act, qs.log_q, y2))
+    o12 = np.asarray(mpt_matvec(tree, a, b, act, qs.log_q, y1 + 2.0 * y2))
+    np.testing.assert_allclose(o12, o1 + 2.0 * o2, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(o1, dense @ y1, rtol=1e-3, atol=1e-4)

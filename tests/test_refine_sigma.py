@@ -1,0 +1,136 @@
+"""Refinement gains (eq. 18-19), bound monotonicity, and bandwidth learning
+(eq. 12/14)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.blocks import coarsest_partition
+from repro.core.qopt import lower_bound, optimize_q
+from repro.core.refine import refine_to_budget, refine_topk, refinement_gains
+from repro.core.sigma import fit_sigma_q, sigma_init, sigma_star
+from repro.core.tree import build_tree
+
+
+def _fit(rng, n=32, d=3, sigma=1.0, cap_mult=8):
+    x = rng.randn(n, d).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree, cap=cap_mult * 2 * tree.n_internal)
+    sig = jnp.asarray(sigma, jnp.float32)
+    qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                    jnp.asarray(bp.active), sig)
+    return x, tree, bp, qs, sig
+
+
+def test_gains_nonnegative(rng):
+    """Refinement gains are >= 0 by Jensen (paper: the bound can never
+    decrease under refinement)."""
+    _, tree, bp, qs, sig = _fit(rng)
+    g = np.asarray(refinement_gains(
+        tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
+        qs.log_q, sig))
+    finite = g[np.isfinite(g)]
+    assert len(finite) > 0
+    assert np.all(finite >= -1e-6)
+
+
+def test_gain_is_lower_bound_of_actual_gain(rng):
+    """Delta_h (eq. 19) must lower-bound the actual bound improvement after
+    the refinement + global re-optimization (paper §4.4)."""
+    _, tree, bp, qs, sig = _fit(rng, n=24)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    before = float(qs.bound)
+    g = np.asarray(refinement_gains(tree, a, b, act, qs.log_q, sig))
+    i = int(np.nanargmax(np.where(np.isfinite(g), g, -np.inf)))
+    predicted = float(g[i])
+    refine_topk(bp, tree, g, k=1)
+    qs2 = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                     jnp.asarray(bp.active), sig)
+    actual = float(qs2.bound) - before
+    assert actual >= predicted - 1e-3 - 1e-4 * abs(before), (actual, predicted)
+
+
+def test_bound_monotone_under_refinement(rng):
+    _, tree, bp, qs, sig = _fit(rng, n=40)
+    bounds = [float(qs.bound)]
+    for target in (1.5, 2.0, 3.0):
+        qs2, _ = refine_to_budget(bp, tree, sig,
+                                  max_blocks=int(target * 2 * 39), batch=8)
+        bounds.append(float(qs2.bound))
+    diffs = np.diff(bounds)
+    assert np.all(diffs >= -1e-3), bounds
+
+
+def test_refinement_saturates_at_nlogn(rng):
+    """Horizontal+symmetric refinement cannot exceed ~N log2 N blocks (the
+    paper stops at O(N log N)); budget beyond that saturates gracefully."""
+    n = 16
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree, cap=4 * n * n)
+    refine_to_budget(bp, tree, jnp.asarray(1.0), max_blocks=n * n * 2, batch=4)
+    assert bp.n_active == n * int(np.log2(n))
+
+
+def test_sigma_init_matches_bruteforce(rng):
+    """Eq. 14 via O(Nd) moments == brute-force pairwise computation."""
+    n, d = 50, 4
+    x = rng.randn(n, d).astype(np.float32)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    brute = np.sqrt(d2.sum() / d) / n
+    fast = float(sigma_init(x))
+    assert np.isclose(fast, brute, rtol=1e-4)
+
+
+def test_sigma_star_maximizes_bound(rng):
+    """Eq. 12 should beat nearby bandwidths for fixed q (quasi-concavity)."""
+    _, tree, bp, qs, sig = _fit(rng, n=30, sigma=2.0)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    s_star = sigma_star(tree, a, b, act, qs.log_q)
+    val_star = float(lower_bound(tree, a, b, act, qs.log_q, s_star))
+    for mult in (0.7, 0.9, 1.1, 1.4):
+        val = float(lower_bound(tree, a, b, act, qs.log_q, s_star * mult))
+        assert val <= val_star + 1e-4 * abs(val_star)
+
+
+def test_alternating_optimization_monotone(rng):
+    """Each alternation step (q-opt at new sigma) must not decrease l(D)."""
+    n = 28
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    a = jnp.asarray(bp.a); b = jnp.asarray(bp.b); act = jnp.asarray(bp.active)
+    sig = sigma_init(x)
+    qs = optimize_q(tree, a, b, act, sig)
+    prev = float(qs.bound)
+    for _ in range(5):
+        sig = sigma_star(tree, a, b, act, qs.log_q)
+        qs = optimize_q(tree, a, b, act, sig)
+        cur = float(qs.bound)
+        assert cur >= prev - 1e-3 * abs(prev)
+        prev = cur
+
+
+def test_fit_sigma_q_converges(rng):
+    n = 40
+    x = rng.randn(n, 5).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    sig, qs, iters = fit_sigma_q(
+        tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
+        sigma_init(x))
+    assert iters < 20
+    assert float(sig) > 0
+    assert np.isfinite(float(qs.bound))
+
+
+def test_sigma_insensitive_to_init(rng):
+    """Paper §4.2: convergence not sensitive to the initial sigma."""
+    n = 36
+    x = rng.randn(n, 3).astype(np.float32)
+    tree = build_tree(x)
+    bp = coarsest_partition(tree)
+    args = (tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active))
+    s1, _, _ = fit_sigma_q(*args, 0.05, max_iters=50)
+    s2, _, _ = fit_sigma_q(*args, 50.0, max_iters=50)
+    assert np.isclose(float(s1), float(s2), rtol=0.02)

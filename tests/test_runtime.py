@@ -1,0 +1,174 @@
+"""Runtime substrate: checkpoint atomicity/roundtrip/elasticity, preemption,
+watchdog, gradient compression."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import (compress_tree, decompress_tree)
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.preemption import GracefulShutdown, Watchdog
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {
+        "a": jnp.asarray(r.randn(4, 8), jnp.float32),
+        "nested": {"b": jnp.asarray(r.randn(3), jnp.float32),
+                   "c": jnp.asarray(r.randint(0, 5, (2, 2)), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 7, t, fingerprint="fp1")
+    like = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), t)
+    restored, step = ckpt.restore(tmp_path, like, expect_fingerprint="fp1")
+    assert step == 7
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        t, restored)
+
+
+def test_checkpoint_latest_pointer(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    ckpt.save(tmp_path, 5, t)
+    ckpt.save(tmp_path, 3, t)  # out-of-order write: LATEST moves to 3
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_checkpoint_fingerprint_mismatch_refuses(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t, fingerprint="good")
+    with pytest.raises(ValueError, match="fingerprint"):
+        ckpt.restore(tmp_path, t, expect_fingerprint="bad")
+
+
+def test_checkpoint_structure_mismatch_refuses(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"only": jnp.zeros(3)})
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    t = _tree(3)
+    ckpt.save_async(tmp_path, 11, t, fingerprint="x")
+    ckpt.wait_for_saves()
+    restored, step = ckpt.restore(tmp_path, t)
+    assert step == 11
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    """A completed save leaves no tmp dirs behind."""
+    ckpt.save(tmp_path, 2, _tree())
+    leftovers = [p for p in tmp_path.iterdir() if ".tmp" in p.name]
+    assert not leftovers
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    """Save on an 8-device mesh, restore onto 4, then back onto 8.
+
+    Runs in subprocesses because XLA fixes the device count per process.
+    """
+    script = textwrap.dedent("""
+        import os, sys
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sys.path.insert(0, %r)
+        from repro.runtime import checkpoint as ckpt
+        mesh = jax.make_mesh((%d,), ("data",))
+        t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        if %r == "save":
+            t = jax.tree_util.tree_map(lambda a, s: jax.device_put(a, s), t, sh)
+            ckpt.save(%r, 1, t, fingerprint="elastic")
+        else:
+            restored, step = ckpt.restore(%r, t, shardings=sh,
+                                          expect_fingerprint="elastic")
+            w = restored["w"]
+            assert len(w.sharding.device_set) == %d, w.sharding
+            np.testing.assert_array_equal(np.asarray(w),
+                np.arange(64, dtype=np.float32).reshape(8, 8))
+        print("OK")
+    """)
+
+    def run(n_dev, mode):
+        code = script % (n_dev, SRC, n_dev, mode, str(tmp_path),
+                         str(tmp_path), n_dev)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=240)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
+    run(8, "save")
+    run(4, "load")   # elastic: fewer devices
+    run(8, "load")   # elastic: back to more devices
+
+
+def test_graceful_shutdown_flag():
+    g = GracefulShutdown(signals=())
+    assert not g.requested
+    g.request()
+    assert g.requested
+
+
+def test_watchdog_detects_stall():
+    events = []
+    w = Watchdog(timeout_s=0.2, on_stall=lambda dt: events.append(dt),
+                 poll_s=0.02).start()
+    for _ in range(3):
+        w.beat()
+        time.sleep(0.05)
+    assert not w.stalled
+    time.sleep(0.4)
+    assert w.stalled and events
+    w.stop()
+
+
+# ------------------------------------------------------- grad compression
+def test_bf16_compression_bound(rng):
+    g = {"w": jnp.asarray(rng.randn(128, 64), jnp.float32)}
+    c, aux = compress_tree(g, "bf16")
+    d = decompress_tree(c, aux, "bf16")
+    rel = np.abs(np.asarray(d["w"]) - np.asarray(g["w"])) / (
+        np.abs(np.asarray(g["w"])) + 1e-9)
+    assert rel.max() < 1e-2
+    assert c["w"].dtype == jnp.bfloat16
+
+
+def test_int8_compression_unbiased(rng):
+    """Stochastic rounding: E[deq(q(g))] == g (bias shrinks with n trials)."""
+    g = {"w": jnp.asarray(rng.randn(32, 16), jnp.float32)}
+    acc = np.zeros((32, 16), np.float64)
+    trials = 200
+    for i in range(trials):
+        c, aux = compress_tree(g, "int8", key=jax.random.PRNGKey(i))
+        acc += np.asarray(decompress_tree(c, aux, "int8")["w"])
+    mean = acc / trials
+    scale = np.abs(np.asarray(g["w"])).max() / 127.0
+    bias = np.abs(mean - np.asarray(g["w"]))
+    assert bias.max() < 4 * scale / np.sqrt(trials) + 1e-6
+
+
+def test_int8_compression_error_bound(rng):
+    g = {"w": jnp.asarray(rng.randn(64, 64), jnp.float32)}
+    c, aux = compress_tree(g, "int8", key=jax.random.PRNGKey(0))
+    d = decompress_tree(c, aux, "int8")
+    scale = np.abs(np.asarray(g["w"])).max() / 127.0
+    err = np.abs(np.asarray(d["w"]) - np.asarray(g["w"]))
+    assert err.max() <= scale + 1e-6
+    assert c["w"].dtype == jnp.int8

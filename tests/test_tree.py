@@ -1,0 +1,127 @@
+"""Partition-tree invariants: heap layout, weighted statistics, ghosts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.tree import build_tree, leaf_range, level_slice, node_level
+
+
+def _stats_ok(x, tree):
+    n = x.shape[0]
+    # root statistics equal global statistics
+    assert np.isclose(float(tree.W[0]), n)
+    np.testing.assert_allclose(np.asarray(tree.S1[0]), x.sum(0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(
+        float(tree.S2[0]), (x * x).sum(), rtol=1e-4, atol=1e-3
+    )
+    # every internal node's stats are the sum of its children's
+    W = np.asarray(tree.W)
+    S1 = np.asarray(tree.S1)
+    S2 = np.asarray(tree.S2)
+    for k in range(tree.n_internal):
+        assert np.isclose(W[k], W[2 * k + 1] + W[2 * k + 2])
+        np.testing.assert_allclose(S1[k], S1[2 * k + 1] + S1[2 * k + 2],
+                                   rtol=1e-4, atol=1e-3)
+        assert np.isclose(S2[k], S2[2 * k + 1] + S2[2 * k + 2], rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,d", [(8, 2), (37, 5), (64, 3), (100, 7), (3, 1)])
+def test_tree_stats_consistency(rng, n, d):
+    x = rng.randn(n, d).astype(np.float32)
+    tree = build_tree(x)
+    _stats_ok(x, tree)
+
+
+@pytest.mark.parametrize("n", [5, 8, 13, 64, 100])
+def test_leaf_permutation_bijection(rng, n):
+    x = rng.randn(n, 4).astype(np.float32)
+    tree = build_tree(x)
+    slot_of = np.asarray(tree.slot_of)
+    leaf_of = np.asarray(tree.leaf_of)
+    # every real row maps to a unique slot and back
+    assert len(set(slot_of.tolist())) == n
+    for i in range(n):
+        assert leaf_of[slot_of[i]] == i
+    # ghost slots carry zero weight and zero coordinates
+    w = np.asarray(tree.w_leaf)
+    ghosts = np.setdiff1d(np.arange(tree.n_leaves), slot_of)
+    assert np.all(w[ghosts] == 0)
+    assert np.all(w[slot_of] == 1)
+
+
+def test_points_in_leaf_order_match(rng):
+    x = rng.randn(21, 3).astype(np.float32)
+    tree = build_tree(x)
+    slot_of = np.asarray(tree.slot_of)
+    xl = np.asarray(tree.x_leaf)
+    np.testing.assert_allclose(xl[slot_of], x, rtol=1e-6)
+
+
+def test_leaf_range_contiguity():
+    L = 4
+    lo, hi = leaf_range(0, L)
+    assert (lo, hi) == (0, 16)
+    lo, hi = leaf_range(1, L)
+    assert (lo, hi) == (0, 8)
+    lo, hi = leaf_range(2, L)
+    assert (lo, hi) == (8, 16)
+    # a node's range is the union of its children's
+    for k in range(7):
+        l1 = leaf_range(2 * k + 1, L)
+        l2 = leaf_range(2 * k + 2, L)
+        assert leaf_range(k, L) == (l1[0], l2[1])
+        assert l1[1] == l2[0]
+
+
+def test_node_level_and_slices():
+    assert node_level(0) == 0
+    assert node_level(1) == 1 and node_level(2) == 1
+    assert node_level(3) == 2
+    assert level_slice(0) == slice(0, 1)
+    assert level_slice(2) == slice(3, 7)
+
+
+def test_split_quality_separated_clusters(rng):
+    """The root split should separate two far-apart clusters."""
+    a = rng.randn(16, 3).astype(np.float32) + 50.0
+    b = rng.randn(16, 3).astype(np.float32) - 50.0
+    x = np.concatenate([a, b])
+    tree = build_tree(x)
+    left_rows = set(np.asarray(tree.leaf_of)[: tree.n_leaves // 2].tolist())
+    # all of one cluster on one side
+    assert left_rows in (set(range(16)), set(range(16, 32)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=70),
+    d=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tree_properties_hypothesis(n, d, seed):
+    r = np.random.RandomState(seed)
+    x = (r.randn(n, d) * r.uniform(0.1, 10)).astype(np.float32)
+    tree = build_tree(x)
+    _stats_ok(x, tree)
+    # weights: exactly n real leaves
+    assert int(np.asarray(tree.w_leaf).sum()) == n
+
+
+def test_weighted_build(rng):
+    x = rng.randn(20, 3).astype(np.float32)
+    w = (rng.rand(20) > 0.3).astype(np.float32)
+    tree = build_tree(x, weights=w)
+    assert np.isclose(float(tree.W[0]), w.sum())
+    np.testing.assert_allclose(
+        np.asarray(tree.S1[0]), (x * w[:, None]).sum(0), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_duplicate_points(rng):
+    """Degenerate data (all identical) must still build a valid tree."""
+    x = np.ones((10, 4), dtype=np.float32)
+    tree = build_tree(x)
+    assert float(tree.W[0]) == 10
+    assert not np.any(np.isnan(np.asarray(tree.S1)))

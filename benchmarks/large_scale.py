@@ -47,6 +47,32 @@ def run():
     emit(f"table2/propagate/alpha_like/n={N}/iters={ITERS}", us_prop,
          f"ccr={acc:.4f}")
 
+    # beyond paper: BATCH concurrent propagation problems (distinct labeled
+    # subsets) answered by ONE fitted tree in a single batched dispatch,
+    # vs the serial loop the paper's serving model implies
+    batch = 8
+    y0s = []
+    for b in range(batch):
+        lab = np.zeros(N, bool)
+        lab[rng.choice(N, N // 10, replace=False)] = True
+        y0s.append(np.asarray(one_hot_labels(labels, lab, 2)))
+    stack = jnp.asarray(np.stack(y0s))
+    # warm both paths so neither timing window pays trace+compile
+    vdt.label_propagate(stack, alpha=0.01, n_iters=ITERS).block_until_ready()
+    vdt.label_propagate(stack[0], alpha=0.01,
+                        n_iters=ITERS).block_until_ready()
+    t0 = time.perf_counter()
+    out = vdt.label_propagate(stack, alpha=0.01, n_iters=ITERS)
+    out.block_until_ready()
+    us_bat = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for b in range(batch):
+        vdt.label_propagate(stack[b], alpha=0.01,
+                            n_iters=ITERS).block_until_ready()
+    us_loop = (time.perf_counter() - t0) * 1e6
+    emit(f"table2/propagate_batched/alpha_like/n={N}/b={batch}", us_bat,
+         f"loop={us_loop:.0f}us,speedup={us_loop / us_bat:.2f}x")
+
     # extrapolate to the paper's full sizes with the measured constant
     c_build = us_build / (N * math.log2(N))
     for name, n_full in (("alpha", 500_000), ("ocr", 3_500_000)):

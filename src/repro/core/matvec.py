@@ -11,6 +11,26 @@ fixed — see DESIGN.md):
 
 Leaves read their accumulated path sum.  Ghost leaves hold y = 0 so they
 contribute nothing and receive garbage that is never read back.
+
+Batched multi-RHS
+-----------------
+Every step of Algorithm 1 is linear and acts only on the trailing channel
+axis, so a stacked right-hand side ``Y`` of shape ``(batch, N, C)`` can be
+served two equivalent ways:
+
+  * **level-major batched** — ``collect_up`` / ``_distribute_down`` /
+    ``mpt_matvec_leaforder`` accept arbitrary leading batch dims natively
+    (the reshapes and the segment-sum simply carry the extra axes);
+  * **channel-folded** — fold the batch into the channel axis,
+    ``(batch, N, C) -> (N, batch * C)``, run the single-RHS path once, and
+    unfold.  One CollectUp, one segment-sum, and one DistributeDown serve
+    the whole batch, so per-call dispatch and gather/scatter overhead is
+    paid once instead of ``batch`` times.
+
+``mpt_matvec`` auto-detects a 3-D ``y`` and takes the channel-folded fast
+path; ``mpt_matvec_batched`` is the explicit spelling.  Parity of both paths
+against stacked single-RHS calls (and against the dense ``Q @ Y``) is pinned
+in ``tests/test_batched.py``.
 """
 from __future__ import annotations
 
@@ -21,44 +41,73 @@ import jax.numpy as jnp
 
 from repro.core.tree import PartitionTree
 
-__all__ = ["collect_up", "mpt_matvec", "mpt_matvec_leaforder"]
+__all__ = [
+    "collect_up",
+    "fold_batch",
+    "mpt_matvec",
+    "mpt_matvec_batched",
+    "mpt_matvec_leaforder",
+    "unfold_batch",
+]
+
+
+def fold_batch(ys: jax.Array) -> jax.Array:
+    """(batch, N, C) -> (N, batch * C); the canonical channel folding.
+
+    Single source of truth for the folded layout: folded column ``b*C + ch``
+    holds batch ``b``, channel ``ch`` (per-batch channel blocks, batch-major
+    across blocks); ``unfold_batch`` is its inverse.
+    """
+    batch, n, c = ys.shape
+    return jnp.moveaxis(ys, 0, 1).reshape(n, batch * c)
+
+
+def unfold_batch(y: jax.Array, batch: int, c: int) -> jax.Array:
+    """(N, batch * C) -> (batch, N, C); inverse of ``fold_batch``."""
+    return jnp.moveaxis(y.reshape(y.shape[0], batch, c), 1, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("L",))
 def collect_up(y_leaf: jax.Array, L: int) -> jax.Array:
-    """Per-node sums T (n_nodes, C) from leaf values (Np, C)."""
+    """Per-node sums T (..., n_nodes, C) from leaf values (..., Np, C).
+
+    Leading batch dims are carried through untouched — the level-major
+    reshape sums only ever touch the last two axes.
+    """
     levels = [y_leaf]
     cur = y_leaf
     for _ in range(L):
-        cur = cur.reshape(-1, 2, cur.shape[-1]).sum(axis=1)
+        cur = cur.reshape(*cur.shape[:-2], -1, 2, cur.shape[-1]).sum(axis=-2)
         levels.append(cur)
-    return jnp.concatenate(levels[::-1], axis=0)
+    return jnp.concatenate(levels[::-1], axis=-2)
 
 
 @functools.partial(jax.jit, static_argnames=("L",))
 def _distribute_down(c_node: jax.Array, L: int) -> jax.Array:
-    """Top-down prefix accumulation; returns per-leaf path sums (Np, C)."""
-    acc = c_node[0:1]  # root, (1, C)
+    """Top-down prefix accumulation; returns per-leaf path sums (..., Np, C)."""
+    acc = c_node[..., 0:1, :]  # root, (..., 1, C)
     for lvl in range(L):
         lo, hi = (1 << (lvl + 1)) - 1, (1 << (lvl + 2)) - 1
-        children = c_node[lo:hi]
-        acc = jnp.repeat(acc, 2, axis=0) + children
+        children = c_node[..., lo:hi, :]
+        acc = jnp.repeat(acc, 2, axis=-2) + children
     return acc
 
 
 @functools.partial(jax.jit, static_argnames=("L",))
 def mpt_matvec_leaforder(
-    y_leaf: jax.Array,       # (Np, C) values in leaf order (ghosts 0)
+    y_leaf: jax.Array,       # (..., Np, C) values in leaf order (ghosts 0)
     a: jax.Array,            # (cap,)
     b: jax.Array,            # (cap,)
     q: jax.Array,            # (cap,)  block parameters (0 where inactive)
     L: int,
 ) -> jax.Array:
-    """(QY) in leaf order."""
+    """(QY) in leaf order; any leading batch dims ride along level-major."""
     n_nodes = (1 << (L + 1)) - 1
-    t = collect_up(y_leaf, L)                       # (n_nodes, C)
-    c_block = q[:, None] * t[b]                     # (cap, C)
+    t = collect_up(y_leaf, L)                       # (..., n_nodes, C)
+    c_block = q[:, None] * jnp.take(t, b, axis=-2)  # (..., cap, C)
+    c_block = jnp.moveaxis(c_block, -2, 0)          # (cap, ..., C)
     c_node = jax.ops.segment_sum(c_block, a, num_segments=n_nodes)
+    c_node = jnp.moveaxis(c_node, 0, -2)            # (..., n_nodes, C)
     return _distribute_down(c_node, L)
 
 
@@ -68,10 +117,18 @@ def mpt_matvec(
     b: jax.Array,
     active: jax.Array,
     log_q: jax.Array,
-    y: jax.Array,            # (N, C) in original row order
+    y: jax.Array,            # (N,), (N, C) or (batch, N, C) in row order
 ) -> jax.Array:
-    """(QY) in original row order; O(|B| C + N C)."""
+    """(QY) in original row order; O(|B| C + N C).
+
+    A 3-D ``y`` of shape ``(batch, N, C)`` is served by one device dispatch
+    via channel folding: ``(batch, N, C) -> (N, batch * C)``.
+    """
     y = jnp.asarray(y)
+    if y.ndim == 3:
+        batch, _, c = y.shape
+        out = mpt_matvec(tree, a, b, active, log_q, fold_batch(y))
+        return unfold_batch(out, batch, c)
     squeeze = y.ndim == 1
     if squeeze:
         y = y[:, None]
@@ -81,3 +138,18 @@ def mpt_matvec(
     out_leaf = mpt_matvec_leaforder(y_leaf, a, b, q, tree.L)
     out = out_leaf[tree.slot_of]
     return out[:, 0] if squeeze else out
+
+
+def mpt_matvec_batched(
+    tree: PartitionTree,
+    a: jax.Array,
+    b: jax.Array,
+    active: jax.Array,
+    log_q: jax.Array,
+    ys: jax.Array,           # (batch, N, C) in original row order
+) -> jax.Array:
+    """Explicit batched multi-RHS (Q @ Y_b for every b) in one dispatch."""
+    ys = jnp.asarray(ys)
+    if ys.ndim != 3:
+        raise ValueError(f"mpt_matvec_batched wants (batch, N, C), got {ys.shape}")
+    return mpt_matvec(tree, a, b, active, log_q, ys)

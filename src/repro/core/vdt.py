@@ -109,13 +109,47 @@ class VariationalDualTree:
 
     # ------------------------------------------------------------- inference
     def matvec(self, y) -> jax.Array:
-        """Q @ y in O(|B| + N) (Algorithm 1)."""
+        """Q @ y in O(|B| + N) (Algorithm 1).
+
+        Accepts a single RHS ``(N,)``/``(N, C)`` or a stacked multi-RHS
+        ``(batch, N, C)``; the latter is served in ONE device dispatch via
+        the channel-folded batched path (see ``core.matvec``).
+        """
         return matvec_mod.mpt_matvec(
             self.tree, jnp.asarray(self.bp.a), jnp.asarray(self.bp.b),
             jnp.asarray(self.bp.active), self.qstate.log_q, y,
         )
 
-    def label_propagate(self, y0, alpha: float = 0.01, n_iters: int = 500):
+    def matvec_batched(self, ys) -> jax.Array:
+        """Explicit batched multi-RHS: (batch, N, C) -> (batch, N, C)."""
+        return matvec_mod.mpt_matvec_batched(
+            self.tree, jnp.asarray(self.bp.a), jnp.asarray(self.bp.b),
+            jnp.asarray(self.bp.active), self.qstate.log_q, ys,
+        )
+
+    def label_propagate(self, y0, alpha: float = 0.01, n_iters: int = 500,
+                        batched: Optional[bool] = None):
+        """Label propagation (eq. 15) from seed labels ``y0``.
+
+        ``y0`` may be a single ``(N, C)`` label matrix or a stacked
+        ``(batch, N, C)`` set of independent propagation problems over the
+        same fitted tree.  ``batched=None`` infers from ``y0.ndim``; the
+        batched path folds the batch into the channel axis once, runs the
+        whole ``lax.scan`` in the folded ``(N, batch * C)`` layout (so every
+        iteration is a single Algorithm-1 dispatch), and unfolds at the end.
+        """
+        y0 = jnp.asarray(y0)
+        if batched is None:
+            batched = y0.ndim == 3
+        if batched:
+            if y0.ndim != 3:
+                raise ValueError(
+                    f"batched label_propagate wants (batch, N, C), got {y0.shape}")
+            batch, _, c = y0.shape
+            out = self.label_propagate(matvec_mod.fold_batch(y0), alpha=alpha,
+                                       n_iters=n_iters, batched=False)
+            return matvec_mod.unfold_batch(out, batch, c)
+
         a = jnp.asarray(self.bp.a)
         b = jnp.asarray(self.bp.b)
         active = jnp.asarray(self.bp.active)
@@ -125,7 +159,7 @@ class VariationalDualTree:
         def mv(y):
             return matvec_mod.mpt_matvec(tree, a, b, active, log_q, y)
 
-        return label_propagate(mv, jnp.asarray(y0), alpha=alpha, n_iters=n_iters)
+        return label_propagate(mv, y0, alpha=alpha, n_iters=n_iters)
 
     # ------------------------------------------------------------- utilities
     def refine(self, max_blocks: int, batch: int = 64) -> None:

@@ -1,0 +1,106 @@
+"""Batched fused Label-Propagation step Pallas kernel (TPU).
+
+One device dispatch computes, for a stack of ``batch`` independent label
+matrices over the SAME point set,
+
+    out[b] = alpha * row_softmax(-||x_i - x_j||^2 / (2 sigma^2), zero diag) @ Y[b]
+             + (1 - alpha) * Y0[b]
+
+i.e. a full eq.-15 LP update fused with the exact streaming transition
+matvec, never materializing the (N, N) matrix P.  This is the multi-user
+serving shape: one fitted model, many concurrent propagation problems.
+
+Grid: (batch, M/bm rows, N/bn cols), cols innermost.  As in the single-RHS
+kernel (``fused_lp.py``), VMEM scratch carries the running max m, normalizer
+s and weighted accumulator acc across column tiles; the last column tile
+applies the fused axpy epilogue ``alpha * acc / s + (1 - alpha) * y0`` and
+writes out.  Scratch is re-initialized at every (b, i) pair since the column
+axis is the fastest-varying grid dimension.
+
+``alpha=1.0`` degenerates to a plain batched matvec (the ``(1-alpha) * Y0``
+term vanishes), which is how ``ops.fused_lp_matvec_batched`` calls it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_lp.fused_lp import NEG_BIG, stream_tile_update
+
+__all__ = ["fused_lp_step_batched_kernel"]
+
+
+def _kernel(rows_ref, cols_ref, y_ref, y0_ref, o_ref, m_ref, s_ref, acc_ref,
+            *, inv_two_sigma_sq: float, alpha: float, n_valid: int,
+            block_m: int, block_n: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    ncols = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    stream_tile_update(rows_ref, cols_ref, y_ref[0], m_ref, s_ref, acc_ref,
+                       i, j, inv_two_sigma_sq=inv_two_sigma_sq,
+                       n_valid=n_valid, block_m=block_m, block_n=block_n)
+
+    @pl.when(j == ncols - 1)
+    def _finish():
+        py = acc_ref[...] / jnp.maximum(s_ref[...], 1e-38)[:, None]
+        out = alpha * py + (1.0 - alpha) * y0_ref[0].astype(jnp.float32)
+        o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+def fused_lp_step_batched_kernel(
+    x: jax.Array,          # (N, d)   shared points
+    y: jax.Array,          # (B, N, C) stacked current label matrices
+    y0: jax.Array,         # (B, N, C) stacked seed label matrices
+    sigma: float,
+    alpha: float = 1.0,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """alpha * P @ Y[b] + (1-alpha) * Y0[b] for every b, P never materialized."""
+    n, d = x.shape
+    batch, _, c = y.shape
+    mp = -(-n // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    xp_rows = jnp.pad(x, ((0, mp - n), (0, 0)))
+    xp_cols = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    yp = jnp.pad(y, ((0, 0), (0, np_ - n), (0, 0)))
+    y0p = jnp.pad(y0, ((0, 0), (0, mp - n), (0, 0)))
+
+    kern = functools.partial(
+        _kernel,
+        inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
+        alpha=float(alpha),
+        n_valid=n, block_m=block_m, block_n=block_n,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(batch, mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda b, i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda b, i, j: (j, 0)),
+            pl.BlockSpec((1, block_n, c), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_m, c), lambda b, i, j: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, c), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, mp, c), y.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m,), jnp.float32),
+            pltpu.VMEM((block_m,), jnp.float32),
+            pltpu.VMEM((block_m, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp_rows, xp_cols, yp, y0p)
+    return out[:, :n]

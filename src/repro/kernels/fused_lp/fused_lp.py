@@ -25,24 +25,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_lp_matvec_kernel"]
+__all__ = ["fused_lp_matvec_kernel", "stream_tile_update", "NEG_BIG"]
 
-_NEG_BIG = -1e30
+NEG_BIG = -1e30
 
 
-def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
-            *, inv_two_sigma_sq: float, n_valid: int, block_m: int,
-            block_n: int):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    ncols = pl.num_programs(1)
+def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
+                       i, j, *, inv_two_sigma_sq: float, n_valid: int,
+                       block_m: int, block_n: int):
+    """One column-tile step of the online-softmax streaming recurrence.
 
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
-        s_ref[...] = jnp.zeros_like(s_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+    Shared body of the single-RHS and batched fused-LP kernels: computes
+    the tile's masked logits and folds them into the running max m,
+    normalizer s and accumulator acc (acc += p @ y_tile).  ``y_tile`` is
+    the already-indexed (block_n, C) value tile.  Callers own scratch init
+    (at j == 0) and the finishing epilogue (at the last j).
+    """
     x = rows_ref[...].astype(jnp.float32)          # (bm, d)
     xc = cols_ref[...].astype(jnp.float32)         # (bn, d)
     xx = jnp.sum(x * x, axis=-1)
@@ -56,7 +54,7 @@ def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
     col_ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32,
                                                      (block_m, block_n), 1)
     invalid = (row_ids == col_ids) | (col_ids >= n_valid)
-    logits = jnp.where(invalid, _NEG_BIG, logits)
+    logits = jnp.where(invalid, NEG_BIG, logits)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, logits.max(axis=1))
@@ -64,9 +62,27 @@ def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
     p = jnp.exp(logits - m_new[:, None])
     s_ref[...] = s_ref[...] * alpha + p.sum(axis=1)
     acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jnp.dot(p, y_ref[...].astype(jnp.float32),
+                    + jnp.dot(p, y_tile.astype(jnp.float32),
                               preferred_element_type=jnp.float32))
     m_ref[...] = m_new
+
+
+def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
+            *, inv_two_sigma_sq: float, n_valid: int, block_m: int,
+            block_n: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    ncols = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    stream_tile_update(rows_ref, cols_ref, y_ref[...], m_ref, s_ref, acc_ref,
+                       i, j, inv_two_sigma_sq=inv_two_sigma_sq,
+                       n_valid=n_valid, block_m=block_m, block_n=block_n)
 
     @pl.when(j == ncols - 1)
     def _finish():

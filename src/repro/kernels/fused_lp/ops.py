@@ -1,11 +1,17 @@
-"""jit'd public wrapper for the fused LP matvec kernel."""
+"""jit'd public wrappers for the fused LP matvec / batched LP-step kernels.
+
+All wrappers fall back to Pallas interpret mode off-TPU so the same call
+sites run (slowly but correctly) on CPU test environments.
+"""
 import functools
 
 import jax
 
+from repro.kernels.fused_lp.batched import fused_lp_step_batched_kernel
 from repro.kernels.fused_lp.fused_lp import fused_lp_matvec_kernel
 
-__all__ = ["fused_lp_matvec"]
+__all__ = ["fused_lp_matvec", "fused_lp_matvec_batched",
+           "fused_lp_step_batched"]
 
 
 @functools.partial(jax.jit,
@@ -14,4 +20,24 @@ def fused_lp_matvec(x, y, sigma: float, block_m: int = 256,
                     block_n: int = 256):
     return fused_lp_matvec_kernel(
         x, y, sigma, block_m=block_m, block_n=block_n,
+        interpret=jax.default_backend() != "tpu")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "alpha", "block_m", "block_n"))
+def fused_lp_step_batched(x, y, y0, sigma: float, alpha: float = 0.01,
+                          block_m: int = 256, block_n: int = 256):
+    """One fused eq.-15 LP update for a (B, N, C) stack of label matrices."""
+    return fused_lp_step_batched_kernel(
+        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
+        interpret=jax.default_backend() != "tpu")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "block_m", "block_n"))
+def fused_lp_matvec_batched(x, ys, sigma: float, block_m: int = 256,
+                            block_n: int = 256):
+    """P @ Y[b] for a (B, N, C) stack; alpha=1 degenerates the LP step."""
+    return fused_lp_step_batched_kernel(
+        x, ys, ys, sigma, 1.0, block_m=block_m, block_n=block_n,
         interpret=jax.default_backend() != "tpu")

@@ -1,11 +1,12 @@
-"""Pure-jnp oracle for the fused LP matvec: re-exports the blocked streaming
-reference from core.baselines plus a direct dense form."""
+"""Pure-jnp oracles for the fused LP kernels: re-exports the blocked streaming
+reference from core.baselines plus direct dense forms (single and batched)."""
 import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec
 
-__all__ = ["fused_lp_matvec_ref", "fused_lp_matvec_dense_ref"]
+__all__ = ["fused_lp_matvec_ref", "fused_lp_matvec_dense_ref",
+           "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref"]
 
 
 def fused_lp_matvec_ref(x, y, sigma):
@@ -15,3 +16,14 @@ def fused_lp_matvec_ref(x, y, sigma):
 def fused_lp_matvec_dense_ref(x, y, sigma):
     p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
     return p @ y
+
+
+def fused_lp_matvec_batched_ref(x, ys, sigma):
+    """Dense P applied to every RHS of a (B, N, C) stack."""
+    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    return jnp.einsum("ij,bjc->bic", p, ys)
+
+
+def fused_lp_step_batched_ref(x, ys, y0s, sigma, alpha):
+    """alpha * P @ Y[b] + (1 - alpha) * Y0[b] via the dense P (eq. 15)."""
+    return alpha * fused_lp_matvec_batched_ref(x, ys, sigma) + (1.0 - alpha) * y0s

@@ -25,9 +25,12 @@ from repro.models.moe import moe_apply
 from repro.models.ssm import SSMCache, init_ssm_cache, ssm_apply, ssm_decode
 from repro.models.transformer import HUGE_WINDOW, attn_flags, layer_windows
 from repro.models.whisper import encoder_forward
+# Label-propagation requests ride the same serving layer: propagate_many
+# pads/buckets variable-width label matrices into batched VDT dispatches.
+from repro.serving.propagate import PropagateRequest, propagate_many
 
 __all__ = ["DecodeState", "init_state", "prefill", "decode_step",
-           "DECODE_SLACK"]
+           "DECODE_SLACK", "PropagateRequest", "propagate_many"]
 
 # non-ring caches reserve this many slots beyond the prefilled context
 DECODE_SLACK = 16

@@ -1,0 +1,94 @@
+"""Multi-request Label-Propagation serving over one fitted VDT.
+
+One fitted :class:`~repro.core.vdt.VariationalDualTree` can answer many
+concurrent propagation queries (different seed labels, different label
+widths, different alphas) — the ROADMAP's many-users story.  This module
+turns a heterogeneous request list into as few batched device dispatches as
+possible:
+
+  1. requests are grouped by ``(alpha, n_iters, width bucket)`` — only
+     same-recipe requests can share a ``lax.scan``;
+  2. within a group, each ``(N, C_r)`` label matrix is zero-padded on the
+     channel axis to the bucket width ``Cb`` (the next configured bucket
+     ``>= C_r``) so heterogeneous widths stack without a recompile per
+     width — LP is column-independent and linear, so zero seed columns stay
+     identically zero and never leak into real columns;
+  3. the stacked ``(B, N, Cb)`` batch runs through the channel-folded
+     batched ``label_propagate`` (one Algorithm-1 dispatch per iteration for
+     the WHOLE batch), chunked at ``max_batch`` to bound device memory;
+  4. answers are sliced back to each request's true width and returned in
+     request order.
+
+Bucketing bounds compile cache growth: at most ``len(buckets)`` distinct
+channel widths ever reach the jitted path, whatever widths users send.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PropagateRequest", "propagate_many", "DEFAULT_WIDTH_BUCKETS"]
+
+# powers of two keep the folded channel axis (batch * Cb) lane-friendly
+DEFAULT_WIDTH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class PropagateRequest:
+    """One LP query: seed labels (N, C) plus its propagation recipe."""
+    y0: jax.Array
+    alpha: float = 0.01
+    n_iters: int = 500
+
+
+def _bucket_width(c: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if c <= b:
+            return b
+    raise ValueError(
+        f"label width {c} exceeds the largest bucket {max(buckets)}; "
+        f"extend `buckets` to serve wider label matrices")
+
+
+def propagate_many(
+    vdt,
+    requests: Sequence[PropagateRequest],
+    *,
+    buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
+    max_batch: int = 64,
+) -> list[jax.Array]:
+    """Serve many LP requests against ``vdt``; results in request order.
+
+    Each returned array has the exact ``(N, C_r)`` shape of its request's
+    seed matrix.  Requests sharing ``(alpha, n_iters)`` and a width bucket
+    are answered by a single batched ``label_propagate`` dispatch (chunked
+    at ``max_batch``).
+    """
+    buckets = tuple(sorted(set(int(b) for b in buckets)))
+    n = vdt.tree.n_points
+    results: list[Optional[jax.Array]] = [None] * len(requests)
+
+    groups: dict[tuple, list[tuple[int, jax.Array, int]]] = {}
+    for idx, req in enumerate(requests):
+        y0 = jnp.asarray(req.y0, jnp.float32)
+        if y0.ndim != 2 or y0.shape[0] != n:
+            raise ValueError(
+                f"request {idx}: y0 must be (N={n}, C), got {y0.shape}")
+        c = int(y0.shape[1])
+        cb = _bucket_width(c, buckets)
+        key = (float(req.alpha), int(req.n_iters), cb)
+        groups.setdefault(key, []).append((idx, y0, c))
+
+    for (alpha, n_iters, cb), items in groups.items():
+        for lo in range(0, len(items), max_batch):
+            chunk = items[lo:lo + max_batch]
+            stack = jnp.stack(
+                [jnp.pad(y0, ((0, 0), (0, cb - c))) for _, y0, c in chunk])
+            out = vdt.label_propagate(stack, alpha=alpha, n_iters=n_iters,
+                                      batched=True)
+            for k, (idx, _, c) in enumerate(chunk):
+                results[idx] = out[k, :, :c]
+    return results  # type: ignore[return-value]

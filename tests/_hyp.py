@@ -1,0 +1,67 @@
+"""Hypothesis shim: real `hypothesis` when installed, tiny fallback otherwise.
+
+The seed suite hard-imported `hypothesis`, so a clean environment could not
+even COLLECT four test modules.  Property tests now import from here:
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is available these are the real thing.  Otherwise `given`
+degrades to a deterministic sampler: it draws `FALLBACK_EXAMPLES` pseudo-
+random examples per test from the declared strategies (seeded, so failures
+reproduce) and runs the test body once per draw.  Only the strategy surface
+this repo uses is implemented (`st.integers`, `st.floats`); extend as needed.
+No shrinking, no database — it is a smoke net, not a replacement.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self.sampler = sampler
+
+    class st:  # noqa: N801  (mimics `hypothesis.strategies` module surface)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        # examples are capped at FALLBACK_EXAMPLES regardless, to bound
+        # tier-1 wall clock; the real hypothesis honors max_examples.
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.RandomState(0xC0FFEE)
+                for _ in range(FALLBACK_EXAMPLES):
+                    draw = {k: s.sampler(rng) for k, s in strategies.items()}
+                    fn(*args, **draw, **kwargs)
+
+            # hide the drawn params from pytest, which would otherwise try
+            # to resolve them as fixtures (real hypothesis does the same)
+            import inspect
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return wrapper
+        return deco

@@ -1,6 +1,10 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
 benches must see the single real CPU device; only launch/dryrun.py forces 512
-placeholder devices (in its own process)."""
+placeholder devices (in its own process).
+
+Fitting a VariationalDualTree is the dominant per-test cost (tree build +
+sigma/q compiles), so fitted models that several tests can share are
+session-scoped fixtures here — fit once, read everywhere."""
 import numpy as np
 import pytest
 
@@ -16,3 +20,25 @@ def make_clusters(rng, n, d, n_classes=2, spread=1.0, sep=6.0):
     centers = rng.randn(n_classes, d) * sep
     x = centers[labels] + rng.randn(n, d) * spread
     return x.astype(np.float32), labels
+
+
+@pytest.fixture(scope="session")
+def separated_clusters_vdt():
+    """(x, labels, fitted vdt) on 2 well-separated clusters, n=128."""
+    from repro.core.vdt import VariationalDualTree
+
+    r = np.random.RandomState(7)
+    x, labels = make_clusters(r, 128, 4, n_classes=2, sep=8.0)
+    vdt = VariationalDualTree.fit(x, max_blocks=6 * 128)
+    return x, labels, vdt
+
+
+@pytest.fixture(scope="session")
+def small_fitted_vdt():
+    """(x, vdt) on n=33 gaussian data — shared by parity-style tests."""
+    from repro.core.vdt import VariationalDualTree
+
+    r = np.random.RandomState(3)
+    x = r.randn(33, 4).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 33)
+    return x, vdt

@@ -15,6 +15,14 @@ from repro.training.train_step import init_train_state, lm_loss, make_train_step
 
 B, S = 2, 32
 
+# Tier-1 keeps one cheap representative per execution family (dense/decode
+# and ssm); the full 10-arch sweep is the slow tier: `pytest -m ""`.
+_TIER1_ARCHS = {"smollm-360m", "mamba2-130m"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=() if a in _TIER1_ARCHS else (pytest.mark.slow,))
+    for a in ARCH_IDS
+]
+
 
 def _init(cfg, key):
     if cfg.family == "audio":
@@ -34,7 +42,7 @@ def _batch(cfg, rng, seq=S):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_shapes_and_finiteness(arch, rng):
     cfg = get_smoke_config(arch)
     params = _init(cfg, jax.random.PRNGKey(0))
@@ -54,7 +62,7 @@ def test_forward_shapes_and_finiteness(arch, rng):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_one_train_step_reduces_nothing_nan(arch, rng):
     cfg = get_smoke_config(arch)
     params = _init(cfg, jax.random.PRNGKey(1))
@@ -75,7 +83,7 @@ def test_one_train_step_reduces_nothing_nan(arch, rng):
     )
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_decode_consistency(arch, rng):
     """Decode after prefill must produce logits close to the full forward
     pass at the same position (cache correctness)."""

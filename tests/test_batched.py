@@ -1,0 +1,178 @@
+"""Batched multi-RHS engine: level-major + channel-folded paths, the fused
+batched Pallas LP-step kernel, and the propagate_many serving path.
+
+Parity chain pinned here (small N):
+
+    batched mpt_matvec == stacked single-RHS mpt_matvec == dense Q @ Y
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.matvec import (collect_up, mpt_matvec, mpt_matvec_batched,
+                               mpt_matvec_leaforder)
+from repro.kernels.fused_lp import (fused_lp_matvec_batched,
+                                    fused_lp_matvec_batched_ref,
+                                    fused_lp_step_batched,
+                                    fused_lp_step_batched_ref)
+from repro.serving.propagate import PropagateRequest, propagate_many
+
+
+def _mv_args(vdt):
+    return (vdt.tree, jnp.asarray(vdt.bp.a), jnp.asarray(vdt.bp.b),
+            jnp.asarray(vdt.bp.active), vdt.qstate.log_q)
+
+
+# --------------------------------------------------------- core batched path
+@pytest.mark.parametrize("batch", [1, 3, 8])  # incl. non-power-of-two
+def test_batched_matvec_matches_stacked_and_dense(small_fitted_vdt, batch):
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(batch)
+    ys = r.randn(batch, n, 3).astype(np.float32)
+
+    got = np.asarray(mpt_matvec_batched(*_mv_args(vdt), jnp.asarray(ys)))
+    stacked = np.stack(
+        [np.asarray(mpt_matvec(*_mv_args(vdt), jnp.asarray(ys[i])))
+         for i in range(batch)])
+    dense = vdt.dense_q()
+    want = np.einsum("ij,bjc->bic", dense, ys)
+
+    assert got.shape == (batch, n, 3)
+    np.testing.assert_allclose(got, stacked, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_level_major_leaforder_accepts_leading_batch(small_fitted_vdt):
+    """collect_up / mpt_matvec_leaforder carry batch dims natively."""
+    _, vdt = small_fitted_vdt
+    tree = vdt.tree
+    r = np.random.RandomState(0)
+    y_leaf = r.randn(4, tree.n_leaves, 2).astype(np.float32)
+    y_leaf *= np.asarray(tree.w_leaf)[None, :, None]  # zero the ghosts
+
+    t_b = np.asarray(collect_up(jnp.asarray(y_leaf), tree.L))
+    t_s = np.stack([np.asarray(collect_up(jnp.asarray(y_leaf[i]), tree.L))
+                    for i in range(4)])
+    np.testing.assert_allclose(t_b, t_s, rtol=1e-6, atol=1e-6)
+
+    q = jnp.where(jnp.asarray(vdt.bp.active) & jnp.isfinite(vdt.qstate.log_q),
+                  jnp.exp(vdt.qstate.log_q), 0.0)
+    a, b = jnp.asarray(vdt.bp.a), jnp.asarray(vdt.bp.b)
+    o_b = np.asarray(mpt_matvec_leaforder(jnp.asarray(y_leaf), a, b, q, tree.L))
+    o_s = np.stack(
+        [np.asarray(mpt_matvec_leaforder(jnp.asarray(y_leaf[i]), a, b, q,
+                                         tree.L)) for i in range(4)])
+    np.testing.assert_allclose(o_b, o_s, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_matvec_rejects_bad_rank(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    with pytest.raises(ValueError):
+        mpt_matvec_batched(*_mv_args(vdt), jnp.zeros((33, 2)))
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_batched_linearity_property(small_fitted_vdt, seed):
+    """Q(aY1 + Y2) == a QY1 + QY2 through the batched path (shape-stable
+    draws: only the seed varies, so tier-1 pays one compile)."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(seed)
+    y1 = jnp.asarray(r.randn(2, n, 2).astype(np.float32))
+    y2 = jnp.asarray(r.randn(2, n, 2).astype(np.float32))
+    o1 = np.asarray(mpt_matvec_batched(*_mv_args(vdt), y1))
+    o2 = np.asarray(mpt_matvec_batched(*_mv_args(vdt), y2))
+    o12 = np.asarray(mpt_matvec_batched(*_mv_args(vdt), 3.0 * y1 + y2))
+    np.testing.assert_allclose(o12, 3.0 * o1 + o2, rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------ batched LP (eq. 15)
+def test_batched_label_propagate_matches_loop(small_fitted_vdt):
+    """(batch=8, N, C) stack == 8 looped single-RHS propagations (atol 1e-5,
+    the PR's acceptance criterion)."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(1)
+    y0 = (r.rand(8, n, 3) > 0.8).astype(np.float32)
+
+    got = np.asarray(vdt.label_propagate(y0, alpha=0.05, n_iters=60))
+    want = np.stack(
+        [np.asarray(vdt.label_propagate(y0[i], alpha=0.05, n_iters=60))
+         for i in range(8)])
+    assert got.shape == (8, n, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_batched_label_propagate_batch_one(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(2)
+    y0 = (r.rand(1, n, 2) > 0.8).astype(np.float32)
+    got = np.asarray(vdt.label_propagate(y0, alpha=0.1, n_iters=40))
+    want = np.asarray(vdt.label_propagate(y0[0], alpha=0.1, n_iters=40))
+    np.testing.assert_allclose(got[0], want, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- fused batched Pallas kernel
+@pytest.mark.parametrize("batch,n,c", [(1, 40, 2), (3, 33, 3), (4, 64, 1)])
+def test_fused_batched_matvec_matches_ref(rng, batch, n, c):
+    x = jnp.asarray(rng.randn(n, 5), jnp.float32)
+    ys = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    got = fused_lp_matvec_batched(x, ys, 1.0, block_m=16, block_n=16)
+    want = fused_lp_matvec_batched_ref(x, ys, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_fused_batched_lp_step_matches_ref(rng, batch):
+    n, c, alpha = 48, 2, 0.05
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    ys = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    y0s = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    got = fused_lp_step_batched(x, ys, y0s, 1.0, alpha, block_m=16, block_n=16)
+    want = fused_lp_step_batched_ref(x, ys, y0s, 1.0, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_fused_batched_row_stochastic_action(rng):
+    """P @ 1 == 1 for every batch element through the batched kernel."""
+    x = jnp.asarray(rng.randn(40, 3), jnp.float32)
+    ones = jnp.ones((3, 40, 1), jnp.float32)
+    got = np.asarray(fused_lp_matvec_batched(x, ones, 1.0,
+                                             block_m=16, block_n=16))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------------------ serving layer
+def test_propagate_many_matches_single_calls(small_fitted_vdt):
+    """Heterogeneous widths/alphas, answered in request order, each equal to
+    its single-RHS label_propagate."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(4)
+    recipes = [(2, 0.05, 30), (3, 0.05, 30), (5, 0.05, 30), (2, 0.1, 30),
+               (2, 0.05, 30)]
+    reqs = [PropagateRequest((r.rand(n, c) > 0.8).astype(np.float32),
+                             alpha=a, n_iters=it) for c, a, it in recipes]
+    outs = propagate_many(vdt, reqs, max_batch=2)
+    assert len(outs) == len(reqs)
+    for req, out in zip(reqs, outs):
+        assert out.shape == req.y0.shape
+        want = np.asarray(vdt.label_propagate(
+            jnp.asarray(req.y0), alpha=req.alpha, n_iters=req.n_iters))
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+def test_propagate_many_rejects_bad_shapes(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    with pytest.raises(ValueError):
+        propagate_many(vdt, [PropagateRequest(np.zeros((5, 2), np.float32))])
+    with pytest.raises(ValueError):
+        propagate_many(
+            vdt, [PropagateRequest(np.zeros((33, 999), np.float32))])

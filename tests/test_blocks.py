@@ -1,7 +1,7 @@
 """Block-partition invariants: validity, coarsest structure, mirrors."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 
@@ -49,6 +49,7 @@ def test_blocks_disjoint_sides(rng):
         assert la[1] <= lb[0] or lb[1] <= la[0]  # A ∩ B = ∅
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(
     n=st.integers(min_value=3, max_value=40),
@@ -62,6 +63,7 @@ def test_partition_validity_hypothesis(n, seed):
     assert validate_partition(bp, tree)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(
     n=st.integers(min_value=4, max_value=24),

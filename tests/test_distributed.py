@@ -30,6 +30,7 @@ def _run(body: str, n_dev: int = 8, timeout: int = 420) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """One train step on a 4x2 mesh must match the unsharded step."""
     _run("""

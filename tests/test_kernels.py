@@ -11,8 +11,12 @@ from repro.kernels.pairwise import pairwise_sq_dists, pairwise_sq_dists_ref
 
 
 # --------------------------------------------------------------- pairwise
-@pytest.mark.parametrize("m,n,d", [(8, 8, 4), (100, 64, 7), (257, 129, 16),
-                                   (64, 300, 33)])
+@pytest.mark.parametrize("m,n,d", [
+    (8, 8, 4), (100, 64, 7),
+    # big ragged shapes are interpret-mode-slow on CPU -> slow tier
+    pytest.param(257, 129, 16, marks=pytest.mark.slow),
+    pytest.param(64, 300, 33, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_matches_ref(rng, m, n, d, dtype):
     x = jnp.asarray(rng.randn(m, d), dtype)

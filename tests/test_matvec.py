@@ -1,7 +1,7 @@
 """Matvec (Algorithm 1) must agree exactly with the densified block matrix."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 
@@ -65,6 +65,7 @@ def test_matvec_preserves_constant_vector():
     np.testing.assert_allclose(np.asarray(out), ones, rtol=2e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(
     n=st.integers(min_value=3, max_value=40),

@@ -2,7 +2,7 @@
 the fully-refined limit where Q must equal the exact softmax posteriors."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 
@@ -29,6 +29,7 @@ def test_row_sums_to_one(rng, n, d, sigma):
     np.testing.assert_allclose(dense.sum(1), np.ones(n), rtol=2e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(
     n=st.integers(min_value=3, max_value=50),

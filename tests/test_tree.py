@@ -1,7 +1,7 @@
 """Partition-tree invariants: heap layout, weighted statistics, ghosts."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 
@@ -94,6 +94,7 @@ def test_split_quality_separated_clusters(rng):
     assert left_rows in (set(range(16)), set(range(16, 32)))
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     n=st.integers(min_value=2, max_value=70),

@@ -1,0 +1,70 @@
+"""CI benchmark-regression gate.
+
+Compares the machine-readable results the benchmarks wrote
+(``BENCH_<name>.json``, see ``benchmarks/common.write_json``) against the
+committed floors in ``benchmarks/baselines.json`` and exits non-zero when
+any figure falls below its floor — turning the benchmark smoke into an
+actual regression gate.
+
+Baselines map ``<bench>.<metric>`` to a floor; metrics are looked up in the
+bench's JSON top level (keys starting with ``_`` are annotations, skipped).
+Floors are deliberately conservative (well under what a quiet CI runner
+measures in tiny mode) so OS noise doesn't flake the gate, while a real
+regression — e.g. the batched path degrading to the per-request loop —
+still trips it.
+
+    python -m benchmarks.check_gate [--dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+
+def check(results_dir: str) -> int:
+    with open(BASELINES) as fh:
+        baselines = json.load(fh)
+
+    failures, checked = [], 0
+    for bench, floors in baselines.items():
+        if bench.startswith("_"):
+            continue  # annotation keys, not benchmarks
+        path = os.path.join(results_dir, f"BENCH_{bench}.json")
+        if not os.path.exists(path):
+            failures.append(f"{bench}: missing {path} (benchmark not run?)")
+            continue
+        with open(path) as fh:
+            result = json.load(fh)
+        for metric, floor in floors.items():
+            got = result.get(metric)
+            if got is None:
+                failures.append(f"{bench}.{metric}: not in {path}")
+                continue
+            checked += 1
+            status = "OK " if got >= floor else "FAIL"
+            print(f"[{status}] {bench}.{metric}: {got:.3f} (floor {floor})")
+            if got < floor:
+                failures.append(f"{bench}.{metric}: {got:.3f} < floor {floor}")
+
+    if failures:
+        print("\nbench-gate FAILED:", file=sys.stderr)
+        for failure in failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    print(f"\nbench-gate passed ({checked} metrics)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=".", help="directory holding the BENCH_*.json results")
+    args = ap.parse_args()
+    return check(args.dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,21 @@
-"""Benchmark utilities: timing, CSV emission."""
+"""Benchmark utilities: timing, CSV emission, machine-readable JSON results.
+
+Benchmarks print their CSV lines as before (`emit`) and additionally collect
+key figures into a dict written as ``BENCH_<name>.json`` (`write_json`) —
+the artifact the CI `bench-gate` job uploads and checks against the
+committed floors in ``benchmarks/baselines.json``.  ``BENCH_OUT_DIR``
+overrides where the JSON lands (default: current directory).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
 
-__all__ = ["timeit", "emit"]
+__all__ = ["timeit", "emit", "json_path", "write_json"]
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -24,3 +33,22 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def json_path(name: str) -> str:
+    """Where ``BENCH_<name>.json`` goes (honors ``BENCH_OUT_DIR``)."""
+    return os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                        f"BENCH_{name}.json")
+
+
+def write_json(name: str, payload: dict) -> str:
+    """Write the benchmark's machine-readable result file; returns its path."""
+    path = json_path(name)
+    payload = dict(payload)
+    payload.setdefault("bench", name)
+    payload.setdefault("tiny", bool(os.environ.get("BENCH_TINY")))
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path

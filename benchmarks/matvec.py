@@ -3,7 +3,9 @@ plus the fused Pallas exact-matvec kernel (beyond paper) and the batched
 multi-RHS engine (one dispatch vs a loop of single-RHS calls).
 
 Set BENCH_TINY=1 for a seconds-long CI smoke run (small N, batched section
-only at the single size)."""
+only at the single size).  Writes ``BENCH_matvec.json`` with the
+batched-vs-loop speedups per size — the figures the CI bench-gate compares
+against ``benchmarks/baselines.json``."""
 from __future__ import annotations
 
 import os
@@ -11,7 +13,7 @@ import os
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json
 from repro.core.baselines import (build_knn_graph, exact_transition_matrix,
                                   knn_matvec, streaming_exact_matvec)
 from repro.core.sigma import sigma_init
@@ -25,7 +27,7 @@ BATCH = 8       # multi-RHS stack size for the batched engine section
 LP_ITERS = 5 if TINY else 50
 
 
-def _bench_batched(vdt, n: int):
+def _bench_batched(vdt, n: int) -> dict:
     """Batched (BATCH, N, C) engine vs BATCH looped single-RHS calls."""
     r = np.random.RandomState(0)
     ys = jnp.asarray(r.randn(BATCH, n, C).astype(np.float32))
@@ -53,9 +55,17 @@ def _bench_batched(vdt, n: int):
     emit(f"batched/lp{LP_ITERS}/loop/n={n}/b={BATCH}", us_l, "")
     emit(f"batched/lp{LP_ITERS}/batched/n={n}/b={BATCH}", us_b,
          f"speedup={us_l / us_b:.2f}x")
+    return {
+        "n": n, "batch": BATCH, "lp_iters": LP_ITERS,
+        "matvec_loop_us": us_loop, "matvec_batched_us": us_bat,
+        "matvec_speedup": us_loop / us_bat,
+        "lp_loop_us": us_l, "lp_batched_us": us_b,
+        "lp_speedup": us_l / us_b,
+    }
 
 
 def run():
+    results = []
     data = secstr_like(n=max(SIZES), d=64 if TINY else 315)
     for n in SIZES:
         x = jnp.asarray(data.x[:n])
@@ -66,7 +76,7 @@ def run():
         us = timeit(vdt.matvec, y)
         emit(f"fig2b/matvec/vdt/n={n}", us, f"blocks={vdt.n_blocks}")
 
-        _bench_batched(vdt, n)
+        results.append(_bench_batched(vdt, n))
 
         g = build_knn_graph(x, 2, sig)
         us = timeit(lambda yy: knn_matvec(g, yy), y)
@@ -80,6 +90,13 @@ def run():
         us = timeit(lambda yy: streaming_exact_matvec(x, yy, sig), y)
         emit(f"fig2b/matvec/exact_streaming/n={n}", us,
              "fused flash form, O(N*blk) mem")
+
+    write_json("matvec", {
+        "sizes": results,
+        # gate figures: worst case over sizes, so a regression at any N trips
+        "matvec_speedup": min(r["matvec_speedup"] for r in results),
+        "lp_speedup": min(r["lp_speedup"] for r in results),
+    })
 
 
 if __name__ == "__main__":

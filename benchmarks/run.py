@@ -16,7 +16,7 @@ def main() -> None:
         os.environ.setdefault("BENCH_LARGE_N", "20000")
 
     from benchmarks import (ccr, construction, kernels_bench, large_scale,
-                            matvec, refinement, roofline_table)
+                            matvec, refinement, roofline_table, serving)
 
     suites = [
         ("fig2a-construction", construction.run),
@@ -26,6 +26,7 @@ def main() -> None:
         ("table2-large-scale", large_scale.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline_table.run),
+        ("serving-engine", serving.run),
     ]
     print("name,us_per_call,derived")
     failed = []

@@ -1,0 +1,147 @@
+"""Continuous-batching engine under closed-loop load vs a per-request loop.
+
+The headline PR-2 number: one fitted VDT (N=4096 full / N=256 tiny) serves a
+population of mixed-width, mixed-alpha LP requests two ways —
+
+  serial:  a naive per-request loop, ``vdt.label_propagate`` one request at
+           a time (what a user without the engine would write);
+  engine:  ``PropagateEngine`` fed by K closed-loop client threads (each
+           submits, blocks on its future, submits the next), for K in
+           ``CONCURRENCY`` — offered load scales with K.
+
+Both sides are warmed first so compile time is excluded; the engine's jit
+executables are bounded by the width/batch buckets either way.  Emits CSV
+lines like the other benchmarks and writes ``BENCH_serving.json`` with
+throughput, latency quantiles, batch occupancy, and the speedup-vs-serial
+per concurrency level — the CI bench-gate artifact.
+
+    PYTHONPATH=src python -m benchmarks.serving          # full (N=4096)
+    BENCH_TINY=1 PYTHONPATH=src python -m benchmarks.serving
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, write_json
+from repro.core.vdt import VariationalDualTree
+from repro.data.synthetic import secstr_like
+from repro.serving.engine import PropagateEngine
+from repro.serving.propagate import PropagateRequest
+
+TINY = bool(os.environ.get("BENCH_TINY"))
+N = 256 if TINY else 4096
+LP_ITERS = 10 if TINY else 50
+N_REQUESTS = 32 if TINY else 96       # population served per measurement
+CONCURRENCY = (1, 4, 8) if TINY else (1, 4, 16)
+MAX_BATCH = 32
+MAX_WAIT_MS = 25.0   # linger cap; the adaptive quiesce window ends it early
+WIDTHS = (1, 2, 3, 4, 6, 8)           # mixed: exercises width buckets + padding
+ALPHAS = (0.01, 0.05, 0.2)
+
+
+def make_requests(rng, count):
+    reqs = []
+    for _ in range(count):
+        c = int(rng.choice(WIDTHS))
+        y0 = (rng.rand(N, c) > 0.9).astype(np.float32)
+        reqs.append(PropagateRequest(y0, alpha=float(rng.choice(ALPHAS)),
+                                     n_iters=LP_ITERS))
+    return reqs
+
+
+def bench_serial(vdt, requests) -> float:
+    """Naive per-request loop; returns wall seconds for the whole set."""
+    for c in sorted(set(r.y0.shape[1] for r in requests)):  # warm each shape
+        jax.block_until_ready(vdt.label_propagate(
+            np.zeros((N, c), np.float32), alpha=0.01, n_iters=LP_ITERS))
+    t0 = time.perf_counter()
+    for req in requests:
+        jax.block_until_ready(vdt.label_propagate(
+            req.y0, alpha=req.alpha, n_iters=req.n_iters))
+    return time.perf_counter() - t0
+
+
+def bench_engine(vdt, requests, concurrency: int) -> dict:
+    """K closed-loop clients against a fresh engine; returns stats."""
+    with PropagateEngine(vdt, max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                         max_queue=4 * MAX_BATCH) as eng:
+        # compile every (batch bucket, width bucket) executable up front so
+        # the measured window contains zero compiles (serial gets the same
+        # courtesy in bench_serial)
+        eng.warmup(widths=WIDTHS, n_iters=(LP_ITERS,))
+
+        def client(cid):
+            for req in requests[cid::concurrency]:
+                eng.submit(req).result(timeout=600)
+
+        before = eng.metrics()
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(concurrency)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        m = eng.metrics()
+
+    return {
+        "concurrency": concurrency,
+        "wall_s": wall,
+        "throughput_rps": len(requests) / wall,
+        "latency_p50_ms": m.latency_p50_ms,
+        "latency_p95_ms": m.latency_p95_ms,
+        "dispatches": m.dispatches - before.dispatches,
+        "batch_occupancy": (m.batched_requests - before.batched_requests)
+                           / max(1, m.dispatches - before.dispatches),
+    }
+
+
+def run():
+    rng = np.random.RandomState(0)
+    data = secstr_like(n=N, d=64 if TINY else 315)
+    x = np.asarray(data.x[:N])
+
+    t0 = time.perf_counter()
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * N,
+                                  refine_batch=64 if TINY else 256)
+    emit("serving/fit", (time.perf_counter() - t0) * 1e6,
+         f"blocks={vdt.n_blocks}")
+
+    requests = make_requests(rng, N_REQUESTS)
+
+    serial_s = bench_serial(vdt, requests)
+    serial_rps = N_REQUESTS / serial_s
+    emit(f"serving/serial/n={N}/r={N_REQUESTS}", serial_s * 1e6,
+         f"rps={serial_rps:.1f}")
+
+    levels = []
+    for k in CONCURRENCY:
+        stats = bench_engine(vdt, requests, k)
+        stats["speedup_vs_serial"] = stats["throughput_rps"] / serial_rps
+        levels.append(stats)
+        emit(f"serving/engine/n={N}/r={N_REQUESTS}/clients={k}",
+             stats["wall_s"] * 1e6,
+             f"rps={stats['throughput_rps']:.1f} "
+             f"speedup={stats['speedup_vs_serial']:.2f}x "
+             f"occupancy={stats['batch_occupancy']:.1f} "
+             f"p95={stats['latency_p95_ms']:.0f}ms")
+
+    write_json("serving", {
+        "n": N, "requests": N_REQUESTS, "lp_iters": LP_ITERS,
+        "max_batch": MAX_BATCH, "max_wait_ms": MAX_WAIT_MS,
+        "serial_s": serial_s, "serial_rps": serial_rps,
+        "levels": levels,
+        # gate figures: engine throughput + batching at the highest load
+        "speedup": levels[-1]["speedup_vs_serial"],
+        "occupancy": levels[-1]["batch_occupancy"],
+    })
+
+
+if __name__ == "__main__":
+    run()

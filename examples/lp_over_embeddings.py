@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_smoke_config
 from repro.core import VariationalDualTree, ccr, label_propagate, one_hot_labels
-from repro.models.transformer import init_lm, lm_forward
+from repro.models.transformer import init_lm
 
 
 def main():

@@ -22,7 +22,6 @@ reduce-scatters.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

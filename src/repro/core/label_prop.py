@@ -5,6 +5,18 @@
 The matvec is pluggable: VDT block matvec (O(|B|)), kNN sparse matvec
 (O(kN)), dense exact (O(N^2)), or the streaming/fused kernel.  Iterations run
 under ``lax.scan``.
+
+Two entry points:
+
+* :func:`label_propagate` — generic, takes any matvec closure.  Re-traced
+  per call (the closure is fresh each time); fine for scripts and tests.
+* :func:`lp_scan_leaforder` — the serving hot path.  Jitted once per
+  ``(L, n_iters, shape)`` with ``alpha`` as a *traced* scalar-or-per-column
+  array, so repeated serving calls hit the compile cache regardless of the
+  alpha values, and requests with different alphas can share one dispatch
+  (LP is column-independent, so a per-column alpha is exact).  The whole
+  scan runs in leaf order: the row<->leaf permutation is applied once
+  outside the scan instead of a gather + scatter per iteration.
 """
 from __future__ import annotations
 
@@ -15,7 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["one_hot_labels", "label_propagate", "ccr"]
+from repro.core.matvec import mpt_matvec_leaforder
+
+__all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder", "ccr"]
 
 
 def one_hot_labels(
@@ -39,6 +53,35 @@ def label_propagate(
         return y, None
 
     y, _ = jax.lax.scan(step, y0, None, length=n_iters)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("L", "n_iters"))
+def lp_scan_leaforder(
+    y0_leaf: jax.Array,      # (Np, K) seed labels in leaf order (ghosts 0)
+    leaf_mask: jax.Array,    # (Np, 1) 1.0 at real leaves, 0.0 at ghosts
+    a: jax.Array,            # (cap,) block row nodes
+    b: jax.Array,            # (cap,) block col nodes
+    q: jax.Array,            # (cap,) exp(log_q), 0 where inactive
+    alpha: jax.Array,        # () or (K,) — traced, NOT part of the jit key
+    L: int,
+    n_iters: int,
+) -> jax.Array:
+    """Eq. 15 for ``n_iters`` steps, entirely in leaf order; returns (Np, K).
+
+    Ghost leaves receive meaningless DistributeDown path sums, so the matvec
+    term is re-masked every iteration — otherwise ghost garbage would feed
+    back into the next CollectUp and corrupt real rows.  ``y0_leaf`` is zero
+    at ghosts by construction, so masked rows stay identically zero and the
+    caller can gather real rows with ``tree.slot_of`` afterwards.
+    """
+
+    def step(y, _):
+        y = leaf_mask * (alpha * mpt_matvec_leaforder(y, a, b, q, L)) \
+            + (1.0 - alpha) * y0_leaf
+        return y, None
+
+    y, _ = jax.lax.scan(step, y0_leaf, None, length=n_iters)
     return y
 
 

@@ -47,8 +47,20 @@ __all__ = [
     "mpt_matvec",
     "mpt_matvec_batched",
     "mpt_matvec_leaforder",
+    "prepare_q",
     "unfold_batch",
 ]
+
+
+def prepare_q(active: jax.Array, log_q: jax.Array) -> jax.Array:
+    """Block weights ``q = exp(log_q)`` with inactive/-inf entries zeroed.
+
+    Hoist this out of per-iteration / per-request paths: a fitted tree's q
+    never changes between refinements, so serving code computes it once and
+    reuses the buffer across scheduler iterations instead of re-exponentiating
+    inside every scan step.
+    """
+    return jnp.where(active & jnp.isfinite(log_q), jnp.exp(log_q), 0.0)
 
 
 def fold_batch(ys: jax.Array) -> jax.Array:
@@ -132,7 +144,7 @@ def mpt_matvec(
     squeeze = y.ndim == 1
     if squeeze:
         y = y[:, None]
-    q = jnp.where(active & jnp.isfinite(log_q), jnp.exp(log_q), 0.0)
+    q = prepare_q(active, log_q)
     y_leaf = jnp.zeros((tree.n_leaves, y.shape[1]), dtype=y.dtype)
     y_leaf = y_leaf.at[tree.slot_of].set(y)
     out_leaf = mpt_matvec_leaforder(y_leaf, a, b, q, tree.L)

@@ -14,7 +14,7 @@ sensitive to the initial value").
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

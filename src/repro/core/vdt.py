@@ -25,7 +25,7 @@ from repro.core import matvec as matvec_mod
 from repro.core import qopt as qopt_mod
 from repro.core import refine as refine_mod
 from repro.core import sigma as sigma_mod
-from repro.core.label_prop import label_propagate
+from repro.core.label_prop import lp_scan_leaforder
 from repro.core.tree import PartitionTree, build_tree
 
 __all__ = ["VariationalDualTree", "VdtStats"]
@@ -49,6 +49,11 @@ class VariationalDualTree:
     qstate: qopt_mod.QState
     sigma: jax.Array
     stats: VdtStats
+    # device-resident dispatch buffers (a, b, active, q, leaf_mask), built
+    # lazily and reused across serving calls / scheduler iterations; q never
+    # changes between refinements so re-deriving it per call is pure waste.
+    _serve_cache: Optional[tuple] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ fit
     @classmethod
@@ -108,6 +113,25 @@ class VariationalDualTree:
         return cls(tree=tree, bp=bp, qstate=qs, sigma=sig, stats=stats)
 
     # ------------------------------------------------------------- inference
+    def _dispatch_buffers(self) -> tuple:
+        """(a, b, active, q, leaf_mask) on device, cached across calls.
+
+        ``leaf_mask`` is 1.0 exactly at leaf slots holding a real row (so the
+        leaf-order LP scan can keep ghost slots at zero); ``q`` is the
+        ready-to-use ``exp(log_q)`` from :func:`~repro.core.matvec.prepare_q`.
+        Invalidated by :meth:`refine`.
+        """
+        if self._serve_cache is None:
+            a = jnp.asarray(self.bp.a)
+            b = jnp.asarray(self.bp.b)
+            active = jnp.asarray(self.bp.active)
+            q = matvec_mod.prepare_q(active, self.qstate.log_q)
+            mask = jnp.zeros((self.tree.n_leaves, 1), jnp.float32)
+            mask = mask.at[self.tree.slot_of, 0].set(1.0)
+            jax.block_until_ready(q)
+            self._serve_cache = (a, b, active, q, mask)
+        return self._serve_cache
+
     def matvec(self, y) -> jax.Array:
         """Q @ y in O(|B| + N) (Algorithm 1).
 
@@ -115,19 +139,19 @@ class VariationalDualTree:
         ``(batch, N, C)``; the latter is served in ONE device dispatch via
         the channel-folded batched path (see ``core.matvec``).
         """
+        a, b, active, _, _ = self._dispatch_buffers()
         return matvec_mod.mpt_matvec(
-            self.tree, jnp.asarray(self.bp.a), jnp.asarray(self.bp.b),
-            jnp.asarray(self.bp.active), self.qstate.log_q, y,
+            self.tree, a, b, active, self.qstate.log_q, y,
         )
 
     def matvec_batched(self, ys) -> jax.Array:
         """Explicit batched multi-RHS: (batch, N, C) -> (batch, N, C)."""
+        a, b, active, _, _ = self._dispatch_buffers()
         return matvec_mod.mpt_matvec_batched(
-            self.tree, jnp.asarray(self.bp.a), jnp.asarray(self.bp.b),
-            jnp.asarray(self.bp.active), self.qstate.log_q, ys,
+            self.tree, a, b, active, self.qstate.log_q, ys,
         )
 
-    def label_propagate(self, y0, alpha: float = 0.01, n_iters: int = 500,
+    def label_propagate(self, y0, alpha=0.01, n_iters: int = 500,
                         batched: Optional[bool] = None):
         """Label propagation (eq. 15) from seed labels ``y0``.
 
@@ -137,8 +161,21 @@ class VariationalDualTree:
         batched path folds the batch into the channel axis once, runs the
         whole ``lax.scan`` in the folded ``(N, batch * C)`` layout (so every
         iteration is a single Algorithm-1 dispatch), and unfolds at the end.
+
+        ``alpha`` may be a scalar, a per-column ``(C,)`` array (2-D ``y0``),
+        or a per-request ``(batch,)`` array (3-D ``y0``) — LP is
+        column-independent, so heterogeneous alphas are exact and share the
+        one dispatch.  Alpha is a *traced* argument of the underlying jitted
+        scan: serving different alphas never grows the compile cache.
+
+        The scan runs in leaf order end-to-end (``lp_scan_leaforder``): the
+        row<->leaf permutation costs one scatter + one gather per *call*
+        instead of per iteration, and the jitted executable is cached per
+        ``(n_iters, shape)`` so steady-state serving pays dispatch only.
         """
         y0 = jnp.asarray(y0)
+        if not jnp.issubdtype(y0.dtype, jnp.floating):
+            y0 = y0.astype(jnp.float32)
         if batched is None:
             batched = y0.ndim == 3
         if batched:
@@ -146,26 +183,37 @@ class VariationalDualTree:
                 raise ValueError(
                     f"batched label_propagate wants (batch, N, C), got {y0.shape}")
             batch, _, c = y0.shape
+            alpha = jnp.asarray(alpha, y0.dtype)
+            if alpha.ndim == 1:
+                if alpha.shape[0] != batch:
+                    raise ValueError(
+                        f"per-request alpha wants shape ({batch},), got {alpha.shape}")
+                # folded column b*C + ch belongs to request b (see fold_batch)
+                alpha = jnp.repeat(alpha, c)
             out = self.label_propagate(matvec_mod.fold_batch(y0), alpha=alpha,
                                        n_iters=n_iters, batched=False)
             return matvec_mod.unfold_batch(out, batch, c)
 
-        a = jnp.asarray(self.bp.a)
-        b = jnp.asarray(self.bp.b)
-        active = jnp.asarray(self.bp.active)
-        log_q = self.qstate.log_q
+        squeeze = y0.ndim == 1
+        if squeeze:
+            y0 = y0[:, None]
         tree = self.tree
-
-        def mv(y):
-            return matvec_mod.mpt_matvec(tree, a, b, active, log_q, y)
-
-        return label_propagate(mv, y0, alpha=alpha, n_iters=n_iters)
+        a, b, _, q, mask = self._dispatch_buffers()
+        y_leaf = jnp.zeros((tree.n_leaves, y0.shape[1]), y0.dtype)
+        y_leaf = y_leaf.at[tree.slot_of].set(y0)
+        out_leaf = lp_scan_leaforder(
+            y_leaf, mask, a, b, q, jnp.asarray(alpha, y0.dtype),
+            tree.L, int(n_iters),
+        )
+        out = out_leaf[tree.slot_of]
+        return out[:, 0] if squeeze else out
 
     # ------------------------------------------------------------- utilities
     def refine(self, max_blocks: int, batch: int = 64) -> None:
         self.qstate, self.sigma = refine_mod.refine_to_budget(
             self.bp, self.tree, self.sigma, max_blocks, batch=batch
         )
+        self._serve_cache = None  # a/b/q/active all changed
         self.stats.n_blocks = self.bp.n_active
         self.stats.bound = float(self.qstate.bound)
 

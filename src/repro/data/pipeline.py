@@ -19,7 +19,7 @@ loss to fall; for VDT experiments the pipeline serves feature rows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -58,7 +58,8 @@ def compress_tree(grads, mode: str, key=None):
     if mode == "int8":
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         keys = jax.random.split(key, len(leaves))
-        qs, scales = zip(*(int8_compress(l, k) for l, k in zip(leaves, keys)))
+        qs, scales = zip(*(int8_compress(leaf, k)
+                           for leaf, k in zip(leaves, keys)))
         return (jax.tree_util.tree_unflatten(treedef, qs),
                 jax.tree_util.tree_unflatten(treedef, scales))
     raise ValueError(mode)

@@ -14,10 +14,9 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardCtx", "use_ctx", "shard_act", "param_shardings", "current_ctx"]
@@ -164,7 +163,6 @@ def param_shardings(params, ctx: ShardCtx, expert_parallel: bool = False,
         if isinstance(node, dict):
             return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
         shape = node.shape
-        name = path.split("/")[-1]
         stacked = n_layers_stacked and "/layers/" in path + "/"
         core_shape = shape[1:] if stacked and len(shape) > 1 else shape
         spec = _spec_for(path if not stacked else path, core_shape, ctx,

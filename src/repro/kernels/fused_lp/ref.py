@@ -1,6 +1,5 @@
 """Pure-jnp oracles for the fused LP kernels: re-exports the blocked streaming
 reference from core.baselines plus direct dense forms (single and batched)."""
-import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec

@@ -11,10 +11,7 @@ checkpoint + clean exit (preemption-safe).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +19,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.data.pipeline import TokenPipeline
-from repro.distributed.sharding import ShardCtx, param_shardings, use_ctx
+from repro.distributed.sharding import ShardCtx, use_ctx
 from repro.launch.mesh import make_local_mesh
 from repro.models.transformer import init_lm
 from repro.models.whisper import init_encdec

@@ -5,7 +5,6 @@ is expressed as scanned per-layer scalars + ``lax.cond``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -7,7 +7,6 @@ bidirectional self-attention + MLP; decoder layers are causal self-attention
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

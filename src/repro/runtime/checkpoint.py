@@ -68,7 +68,7 @@ def save(ckpt_dir: str | Path, step: int, tree: Any,
     tmp.mkdir()
 
     leaves, treedef = _flatten(tree)
-    host = [np.asarray(l) for l in leaves]
+    host = [np.asarray(leaf) for leaf in leaves]
     np.savez(tmp / "arrays.npz", **{str(i): a for i, a in enumerate(host)})
     manifest = {
         "step": step,
@@ -100,7 +100,7 @@ class _AsyncSaver:
     def submit(self, ckpt_dir, step, tree, fingerprint=""):
         # snapshot to host synchronously (cheap vs serialization)
         leaves, treedef = _flatten(tree)
-        host = [np.asarray(l) for l in leaves]
+        host = [np.asarray(leaf) for leaf in leaves]
         snapshot = jax.tree_util.tree_unflatten(treedef, host)
 
         def work():

@@ -23,14 +23,18 @@ from repro.models.attention import KVCache, attn_apply, attn_decode, init_cache
 from repro.models.layers import Dtypes, mlp_apply, rms_norm, rope
 from repro.models.moe import moe_apply
 from repro.models.ssm import SSMCache, init_ssm_cache, ssm_apply, ssm_decode
-from repro.models.transformer import HUGE_WINDOW, attn_flags, layer_windows
+from repro.models.transformer import HUGE_WINDOW, layer_windows
 from repro.models.whisper import encoder_forward
 # Label-propagation requests ride the same serving layer: propagate_many
-# pads/buckets variable-width label matrices into batched VDT dispatches.
+# pads/buckets variable-width label matrices into batched VDT dispatches,
+# and PropagateEngine serves a live queue of them with continuous batching.
+from repro.serving.engine import PropagateEngine, QueueFull
+from repro.serving.metrics import MetricsSnapshot
 from repro.serving.propagate import PropagateRequest, propagate_many
 
 __all__ = ["DecodeState", "init_state", "prefill", "decode_step",
-           "DECODE_SLACK", "PropagateRequest", "propagate_many"]
+           "DECODE_SLACK", "MetricsSnapshot", "PropagateEngine",
+           "PropagateRequest", "QueueFull", "propagate_many"]
 
 # non-ring caches reserve this many slots beyond the prefilled context
 DECODE_SLACK = 16
@@ -165,7 +169,6 @@ def prefill(params, tokens: jax.Array, cfg,
 def _prefill_ssm(params, x, pos, cfg, dt):
     b = x.shape[0]
     shared = params.get("shared_attn")
-    flags = attn_flags(cfg)
     n_attn = _n_attn_points(cfg)
 
     shared_ks, shared_vs = [], []
@@ -216,8 +219,6 @@ def _prefill_ssm(params, x, pos, cfg, dt):
 
 
 def _prefill_audio(params, tokens, frames, cfg, dt):
-    from repro.models.whisper import decoder_forward
-
     enc = encoder_forward(params, frames, cfg)
     b, s = tokens.shape
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_

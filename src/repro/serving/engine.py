@@ -1,0 +1,361 @@
+"""Continuous-batching async LP serving engine over one fitted VDT.
+
+:class:`PropagateEngine` is the dynamic counterpart of
+:func:`~repro.serving.propagate.propagate_many`: instead of batching a
+static request list, it owns a live bounded queue and a scheduler that
+coalesces *whatever is waiting* into few batched device dispatches, while
+clients block on per-request futures.
+
+Scheduling policy
+-----------------
+One scheduler iteration (``step`` when driven manually, the background
+thread's loop body otherwise):
+
+1. wait for the queue to go non-empty, then linger up to ``max_wait_ms``
+   for it to fill toward ``max_batch`` — the classic throughput/latency
+   batching window (0 disables the linger: dispatch whatever is there).
+   The linger is adaptive: it ends as soon as arrivals quiesce for ~1ms,
+   so a lone request never waits the full window and a resubmit burst
+   from N closed-loop clients is caught whole;
+2. atomically drain up to ``max_batch`` entries, dropping any whose future
+   was cancelled while queued;
+3. group the drained entries by ``n_iters`` (only requests sharing a scan
+   length can share a dispatch).  Alpha does NOT fragment groups — LP is
+   column-independent, so each request's alpha rides the dispatch as one
+   element of a *traced* per-request array (see
+   ``VariationalDualTree.label_propagate``).  Width does not fragment
+   either by default (``coalesce_widths=True``): every request in the
+   group is zero-padded to the group's largest width bucket, because one
+   ``lax.scan`` dispatch has a large fixed cost (hundreds of per-iteration
+   op launches) and a small per-column marginal cost, so one fat dispatch
+   beats several narrow ones on CPU/GPU.  ``coalesce_widths=False``
+   restores per-width-bucket grouping (the ``propagate_many`` policy) for
+   backends where compute scales hard with padded width;
+4. per group, zero-pad widths to the chosen bucket, pad the batch axis to
+   the next power of two (with zero rows at alpha 0), run one batched
+   ``label_propagate``, slice each answer back to its true width, and
+   resolve the futures.
+
+Compile-cache bound
+-------------------
+Jitted executables are keyed by ``(n_iters, N, batch bucket * width
+bucket)``.  Width buckets come from the shared ``buckets`` tuple and batch
+buckets are powers of two up to ``max_batch``, so steady-state traffic
+touches at most ``len(buckets) * log2(max_batch)`` executables per
+``n_iters`` — whatever widths, alphas, and arrival orders users produce.
+``n_iters`` itself is a static scan length, NOT bucketed (changing it
+changes the math): a deployment should pin it to a small recipe set, since
+every distinct value compiles its own executable grid.
+
+Buffer reuse
+------------
+The engine keeps one pinned host staging buffer per ``(batch bucket, width
+bucket)`` and refills it in place each scheduler iteration, and the fitted
+tree's dispatch buffers (block indices, ``exp(log_q)``, leaf mask) are
+cached device-side on the ``VariationalDualTree`` itself — steady-state
+iterations allocate nothing on the host path.
+
+Concurrency contract
+--------------------
+``submit`` is thread-safe and may be called from any thread (or wrapped for
+asyncio via ``asyncio.wrap_future(engine.submit(req))`` — see
+``examples/lp_engine_async.py``).  Exactly one scheduler drives dispatches:
+the background thread (``start=True``) or the caller of ``step``/``flush``
+(``start=False``, the deterministic mode the unit tests use).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serving.metrics import EngineMetrics, MetricsSnapshot
+from repro.serving.propagate import (DEFAULT_WIDTH_BUCKETS, PropagateRequest,
+                                     bucket_width)
+from repro.serving.queue import QueueEntry, QueueFull, RequestQueue
+
+__all__ = ["PropagateEngine", "QueueFull", "PropagateRequest"]
+
+
+def _batch_bucket(n: int, cap: int) -> int:
+    """Next power of two >= n, capped at the configured max batch."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+class PropagateEngine:
+    """Async continuous-batching server for LP requests on one fitted VDT.
+
+    Parameters
+    ----------
+    vdt:         the fitted ``VariationalDualTree`` all requests run against.
+    max_batch:   most requests coalesced into one device dispatch.
+    max_wait_ms: how long the scheduler lingers for a fuller batch once the
+                 first request of an iteration has arrived.
+    max_queue:   bounded-queue capacity; ``submit`` beyond it blocks or
+                 raises :class:`QueueFull` (backpressure).
+    buckets:     label-width buckets, shared with ``propagate_many``.
+    coalesce_widths: pad a whole group to its largest width bucket so mixed
+                 widths share one dispatch (default; see module docstring).
+    start:       spawn the background scheduler thread.  ``start=False``
+                 leaves scheduling to explicit ``step``/``flush`` calls —
+                 deterministic, single-threaded, what the unit tests drive.
+    """
+
+    def __init__(
+        self,
+        vdt,
+        *,
+        max_batch: int = 32,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 256,
+        buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
+        coalesce_widths: bool = True,
+        start: bool = True,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.vdt = vdt
+        self.n = int(vdt.tree.n_points)
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.coalesce_widths = bool(coalesce_widths)
+        self._queue = RequestQueue(max_queue)
+        self._metrics = EngineMetrics()
+        self._seq = 0
+        self._in_flight = 0
+        self._state_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._closed = False
+        # host staging pool: (batch bucket, width bucket) -> np buffer,
+        # refilled in place every scheduler iteration
+        self._staging: dict[tuple[int, int], np.ndarray] = {}
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._loop, name="propagate-engine", daemon=True)
+            self._thread.start()
+
+    # -------------------------------------------------------------- warmup
+    def warmup(self, widths: Optional[Sequence[int]] = None,
+               n_iters: Sequence[int] = (500,)) -> int:
+        """Pre-compile every dispatch executable this traffic can reach.
+
+        The scheduler only ever issues shapes ``(batch bucket, N, width
+        bucket)``, so compiling the full grid up front — every power-of-two
+        batch bucket up to ``max_batch`` crossed with the width buckets that
+        ``widths`` (default: all configured buckets) fall into, per
+        ``n_iters`` value — guarantees measurement/production traffic never
+        stalls on a compile.  Returns the number of executables warmed.
+        Alpha is a traced argument, so no alpha values need covering.
+        """
+        cbs = sorted(set(bucket_width(int(w), self.buckets)
+                         for w in (widths or self.buckets)))
+        bbs = []
+        b = 1
+        while b < self.max_batch:
+            bbs.append(b)
+            b <<= 1
+        bbs.append(self.max_batch)
+        count = 0
+        for ni in n_iters:
+            for cb in cbs:
+                for bb in bbs:
+                    out = self.vdt.label_propagate(
+                        np.zeros((bb, self.n, cb), np.float32),
+                        alpha=np.zeros((bb,), np.float32),
+                        n_iters=int(ni), batched=True)
+                    jax.block_until_ready(out)
+                    count += 1
+        return count
+
+    # ------------------------------------------------------------ submission
+    def submit(self, request: PropagateRequest, *, block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Enqueue one request; returns the future of its (N, C) answer.
+
+        Shape problems surface here, not at dispatch.  When the queue is
+        full, ``block=True`` waits (up to ``timeout``) for capacity and
+        ``block=False`` raises :class:`QueueFull` immediately.  The future
+        supports ``cancel()`` any time before its dispatch starts.
+        """
+        if self._closed:
+            raise RuntimeError("engine is shut down")
+        # private copy: the caller may reuse/mutate its buffer after submit,
+        # while the scheduler thread reads ours at dispatch time
+        y0 = np.array(request.y0, np.float32)
+        if y0.ndim != 2 or y0.shape[0] != self.n:
+            raise ValueError(
+                f"y0 must be (N={self.n}, C), got {y0.shape}")
+        bucket_width(y0.shape[1], self.buckets)  # width must fit a bucket
+        fut: Future = Future()
+        with self._state_lock:
+            seq = self._seq
+            self._seq += 1
+        entry = QueueEntry(seq=seq, request=PropagateRequest(
+            y0=y0, alpha=float(request.alpha), n_iters=int(request.n_iters)),
+            future=fut, t_submit=time.perf_counter())
+        try:
+            self._queue.put(entry, block=block, timeout=timeout)
+        except QueueFull:
+            self._metrics.count("rejected")
+            raise
+        if self._closed and fut.cancel():
+            # lost the race with shutdown(): the entry landed after (or
+            # during) the final flush, so nobody may ever drain it — cancel
+            # rather than hand back a future that could hang forever
+            self._metrics.count("cancelled")
+            raise RuntimeError("engine is shut down")
+        self._metrics.count("submitted")
+        return fut
+
+    # ------------------------------------------------------------ scheduling
+    def step(self) -> int:
+        """One synchronous scheduler iteration: drain + dispatch, no linger.
+
+        Returns the number of futures resolved (results + failures).  This
+        is the whole scheduler — the background thread calls the same code
+        after its batching wait — so tests drive it deterministically.
+        """
+        live, cancelled = self._queue.drain(self.max_batch)
+        if cancelled:
+            self._metrics.count("cancelled", len(cancelled))
+        if not live:
+            return 0
+        with self._state_lock:
+            self._in_flight += len(live)
+        try:
+            return self._dispatch(live)
+        finally:
+            with self._state_lock:
+                self._in_flight -= len(live)
+
+    def flush(self) -> int:
+        """Step until the queue is empty; returns total futures resolved."""
+        total = 0
+        while len(self._queue) > 0:
+            total += self.step()
+        return total
+
+    # while lingering, arrivals quiescing for this long end the batching
+    # window early — resubmit bursts from closed-loop clients land within a
+    # few of these, so the window adapts to offered load instead of always
+    # paying the full max_wait_ms (low load) or dispatching partial bursts
+    # (high load with a short fixed wait)
+    _QUIESCE_S = 1e-3
+
+    def _linger(self) -> None:
+        """Batching window: wait up to ``max_wait_ms`` for a fuller batch,
+        ending early once the batch is full or arrivals stop coming."""
+        deadline = time.perf_counter() + self.max_wait_ms / 1e3
+        seen = len(self._queue)
+        while seen < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                return
+            self._queue.wait_atleast(
+                self.max_batch, timeout=min(remaining, self._QUIESCE_S))
+            grown = len(self._queue)
+            if grown == seen:
+                return  # quiesced: dispatch what we have
+            seen = grown
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                if not self._queue.wait_nonempty(timeout=0.05):
+                    continue
+                if self.max_wait_ms > 0:
+                    self._linger()
+                self.step()
+            except Exception:  # never let the scheduler thread die silently
+                # per-group errors were already delivered via set_exception;
+                # anything reaching here is scheduler-internal — back off a
+                # beat so a persistent fault can't busy-spin the thread
+                self._stop.wait(0.05)
+
+    def _dispatch(self, entries: list[QueueEntry]) -> int:
+        """Group, pad, and serve one drained microbatch."""
+        # group by n_iters (+ width bucket unless coalescing); alpha always
+        # rides as a traced array and never fragments a group
+        groups: dict[tuple[int, int], list[QueueEntry]] = {}
+        for entry in entries:
+            if not entry.future.set_running_or_notify_cancel():
+                self._metrics.count("cancelled")  # cancelled post-drain
+                continue
+            req = entry.request
+            cb = bucket_width(req.y0.shape[1], self.buckets)
+            key = (req.n_iters, 0 if self.coalesce_widths else cb)
+            groups.setdefault(key, []).append(entry)
+
+        resolved = 0
+        for (n_iters, cb), group in sorted(groups.items()):
+            if self.coalesce_widths:
+                cb = max(bucket_width(e.request.y0.shape[1], self.buckets)
+                         for e in group)
+            group.sort(key=lambda e: e.seq)  # deterministic batch layout
+            try:
+                bb = _batch_bucket(len(group), self.max_batch)
+                stack = self._staging.setdefault(
+                    (bb, cb), np.zeros((bb, self.n, cb), np.float32))
+                stack.fill(0.0)
+                alphas = np.zeros((bb,), np.float32)  # padding rows: alpha 0
+                for k, entry in enumerate(group):
+                    y0 = entry.request.y0
+                    stack[k, :, :y0.shape[1]] = y0
+                    alphas[k] = entry.request.alpha
+                out = self.vdt.label_propagate(
+                    stack, alpha=alphas, n_iters=n_iters, batched=True)
+                jax.block_until_ready(out)
+            except Exception as exc:  # resolve the group, keep scheduling
+                for entry in group:
+                    entry.future.set_exception(exc)
+                self._metrics.count("failed", len(group))
+                resolved += len(group)
+                continue
+            self._metrics.record_dispatch(len(group))
+            t_done = time.perf_counter()
+            for k, entry in enumerate(group):
+                c = entry.request.y0.shape[1]
+                entry.future.set_result(out[k, :, :c])
+                self._metrics.record_latency(t_done - entry.t_submit)
+            self._metrics.count("completed", len(group))
+            resolved += len(group)
+        return resolved
+
+    # ----------------------------------------------------------- lifecycle
+    def metrics(self) -> MetricsSnapshot:
+        with self._state_lock:
+            in_flight = self._in_flight
+        return self._metrics.snapshot(
+            queue_depth=len(self._queue), in_flight=in_flight)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work; serve (``wait=True``) or cancel the backlog."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if wait:
+            self.flush()
+        else:
+            live, cancelled = self._queue.drain(self._queue.maxsize)
+            for entry in live:
+                entry.future.cancel()
+            self._metrics.count("cancelled", len(live) + len(cancelled))
+
+    def __enter__(self) -> "PropagateEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=exc == (None, None, None))

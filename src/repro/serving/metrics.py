@@ -1,0 +1,95 @@
+"""Engine observability: thread-safe counters + latency quantiles.
+
+The engine records one event per lifecycle transition (submit, reject,
+cancel, dispatch, complete); :meth:`EngineMetrics.snapshot` folds them into
+an immutable :class:`MetricsSnapshot` that benchmarks and operators read.
+Latencies live in a bounded ring (newest :data:`LATENCY_WINDOW` samples), so
+a long-running engine reports *recent* p50/p95 rather than lifetime ones and
+memory stays O(1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+
+__all__ = ["EngineMetrics", "MetricsSnapshot", "LATENCY_WINDOW"]
+
+# newest-K latency ring: big enough for stable p95, small enough to be O(1)
+LATENCY_WINDOW = 4096
+
+
+def _quantile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSnapshot:
+    """Point-in-time view of engine health (all times milliseconds)."""
+
+    submitted: int = 0  # accepted into the queue
+    rejected: int = 0  # refused at submit (backpressure)
+    cancelled: int = 0  # cancelled before dispatch
+    completed: int = 0  # futures resolved with a result
+    failed: int = 0  # futures resolved with an exception
+    dispatches: int = 0  # batched device dispatches issued
+    batched_requests: int = 0  # real requests covered by those dispatches
+    queue_depth: int = 0  # entries waiting right now
+    in_flight: int = 0  # drained but not yet completed
+    latency_p50_ms: float = float("nan")
+    latency_p95_ms: float = float("nan")
+    latency_mean_ms: float = float("nan")
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean real requests per dispatch (the continuous-batching win)."""
+        if self.dispatches == 0:
+            return float("nan")
+        return self.batched_requests / self.dispatches
+
+
+class EngineMetrics:
+    """Mutable, lock-guarded event sink behind :class:`MetricsSnapshot`."""
+
+    def __init__(self, latency_window: int = LATENCY_WINDOW):
+        self._lock = threading.Lock()
+        self._counts = dict(
+            submitted=0,
+            rejected=0,
+            cancelled=0,
+            completed=0,
+            failed=0,
+            dispatches=0,
+            batched_requests=0,
+        )
+        self._latencies_ms: deque[float] = deque(maxlen=latency_window)
+
+    def count(self, event: str, n: int = 1) -> None:
+        with self._lock:
+            self._counts[event] += n
+
+    def record_dispatch(self, n_requests: int) -> None:
+        with self._lock:
+            self._counts["dispatches"] += 1
+            self._counts["batched_requests"] += n_requests
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            self._latencies_ms.append(seconds * 1e3)
+
+    def snapshot(self, queue_depth: int = 0, in_flight: int = 0) -> MetricsSnapshot:
+        with self._lock:
+            lat = sorted(self._latencies_ms)
+            counts = dict(self._counts)
+        mean = sum(lat) / len(lat) if lat else float("nan")
+        return MetricsSnapshot(
+            queue_depth=queue_depth,
+            in_flight=in_flight,
+            latency_p50_ms=_quantile(lat, 0.50),
+            latency_p95_ms=_quantile(lat, 0.95),
+            latency_mean_ms=mean,
+            **counts,
+        )

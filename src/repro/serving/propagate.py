@@ -7,7 +7,11 @@ turns a heterogeneous request list into as few batched device dispatches as
 possible:
 
   1. requests are grouped by ``(alpha, n_iters, width bucket)`` — only
-     same-recipe requests can share a ``lax.scan``;
+     same-recipe requests can share a ``lax.scan``.  The alpha component of
+     the key is *canonicalized* (rounded to :data:`ALPHA_SIG_DIGITS`
+     significant digits) so near-equal alphas coming from different clients
+     (0.01 vs 0.010000001) land in the same group instead of fragmenting
+     into separate dispatches;
   2. within a group, each ``(N, C_r)`` label matrix is zero-padded on the
      channel axis to the bucket width ``Cb`` (the next configured bucket
      ``>= C_r``) so heterogeneous widths stack without a recompile per
@@ -21,6 +25,15 @@ possible:
 
 Bucketing bounds compile cache growth: at most ``len(buckets)`` distinct
 channel widths ever reach the jitted path, whatever widths users send.
+
+The width-bucket policy (:data:`DEFAULT_WIDTH_BUCKETS`, :func:`bucket_width`)
+is shared with the continuous-batching
+:class:`~repro.serving.engine.PropagateEngine`, which applies it to a live
+queue instead of a static request list.  The remaining helpers serve this
+module's static batching: the engine needs neither :func:`canonical_alpha`
+nor per-alpha grouping (each request's alpha rides its dispatch as one
+element of a traced array) and stages into reusable buffers instead of
+:func:`stack_group`'s fresh stacks.
 """
 from __future__ import annotations
 
@@ -30,10 +43,25 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PropagateRequest", "propagate_many", "DEFAULT_WIDTH_BUCKETS"]
+__all__ = [
+    "ALPHA_SIG_DIGITS",
+    "DEFAULT_WIDTH_BUCKETS",
+    "PropagateRequest",
+    "bucket_width",
+    "canonical_alpha",
+    "group_key",
+    "pad_to_width",
+    "propagate_many",
+    "stack_group",
+]
 
 # powers of two keep the folded channel axis (batch * Cb) lane-friendly
 DEFAULT_WIDTH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+# alphas agreeing to this many significant digits share a dispatch group:
+# float32 LP cannot distinguish finer alpha differences anyway, and a raw
+# float(alpha) key would let 0.01 vs 0.010000001 fragment the batch.
+ALPHA_SIG_DIGITS = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,13 +72,43 @@ class PropagateRequest:
     n_iters: int = 500
 
 
-def _bucket_width(c: int, buckets: Sequence[int]) -> int:
+def bucket_width(c: int, buckets: Sequence[int]) -> int:
+    """Smallest configured bucket ``>= c`` (the padded channel width)."""
     for b in buckets:
         if c <= b:
             return b
     raise ValueError(
         f"label width {c} exceeds the largest bucket {max(buckets)}; "
         f"extend `buckets` to serve wider label matrices")
+
+
+def canonical_alpha(alpha: float) -> float:
+    """Round ``alpha`` to :data:`ALPHA_SIG_DIGITS` significant digits.
+
+    The canonical value is used both as the group key AND as the alpha
+    actually dispatched, so two requests that group together produce
+    bit-identical recipes.
+    """
+    return float(f"{float(alpha):.{ALPHA_SIG_DIGITS}g}")
+
+
+def group_key(alpha: float, n_iters: int, c: int,
+              buckets: Sequence[int]) -> tuple[float, int, int]:
+    """Dispatch-group key ``(canonical alpha, n_iters, width bucket)``."""
+    return (canonical_alpha(alpha), int(n_iters), bucket_width(c, buckets))
+
+
+def pad_to_width(y0: jax.Array, cb: int) -> jax.Array:
+    """Zero-pad ``(N, C)`` seed labels to ``(N, cb)`` on the channel axis."""
+    c = y0.shape[-1]
+    if c == cb:
+        return y0
+    return jnp.pad(y0, ((0, 0), (0, cb - c)))
+
+
+def stack_group(y0s: Sequence[jax.Array], cb: int) -> jax.Array:
+    """Stack same-bucket seed matrices into one ``(B, N, cb)`` batch."""
+    return jnp.stack([pad_to_width(y0, cb) for y0 in y0s])
 
 
 def propagate_many(
@@ -63,9 +121,9 @@ def propagate_many(
     """Serve many LP requests against ``vdt``; results in request order.
 
     Each returned array has the exact ``(N, C_r)`` shape of its request's
-    seed matrix.  Requests sharing ``(alpha, n_iters)`` and a width bucket
-    are answered by a single batched ``label_propagate`` dispatch (chunked
-    at ``max_batch``).
+    seed matrix.  Requests sharing ``(canonical alpha, n_iters)`` and a
+    width bucket are answered by a single batched ``label_propagate``
+    dispatch (chunked at ``max_batch``).
     """
     buckets = tuple(sorted(set(int(b) for b in buckets)))
     n = vdt.tree.n_points
@@ -78,15 +136,13 @@ def propagate_many(
             raise ValueError(
                 f"request {idx}: y0 must be (N={n}, C), got {y0.shape}")
         c = int(y0.shape[1])
-        cb = _bucket_width(c, buckets)
-        key = (float(req.alpha), int(req.n_iters), cb)
+        key = group_key(req.alpha, req.n_iters, c, buckets)
         groups.setdefault(key, []).append((idx, y0, c))
 
     for (alpha, n_iters, cb), items in groups.items():
         for lo in range(0, len(items), max_batch):
             chunk = items[lo:lo + max_batch]
-            stack = jnp.stack(
-                [jnp.pad(y0, ((0, 0), (0, cb - c))) for _, y0, c in chunk])
+            stack = stack_group([y0 for _, y0, _ in chunk], cb)
             out = vdt.label_propagate(stack, alpha=alpha, n_iters=n_iters,
                                       batched=True)
             for k, (idx, _, c) in enumerate(chunk):

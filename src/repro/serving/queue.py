@@ -1,0 +1,103 @@
+"""Bounded request queue for the continuous-batching engine.
+
+A thin condition-variable wrapper around a deque, purpose-built for the
+scheduler's access pattern:
+
+* producers (``PropagateEngine.submit``) ``put`` one entry, either failing
+  fast (``QueueFull``) or blocking until space frees — the engine's
+  backpressure;
+* the single scheduler consumer waits for the queue to go non-empty
+  (``wait_nonempty``) and then ``drain``\\ s up to a whole microbatch in one
+  lock acquisition, skipping entries whose future was already cancelled.
+
+``stdlib queue.Queue`` fits none of this: no multi-item atomic drain, no
+cancellation filtering, and its unfinished-task accounting is dead weight
+here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Optional
+
+__all__ = ["QueueFull", "QueueEntry", "RequestQueue"]
+
+
+class QueueFull(RuntimeError):
+    """Raised by a non-blocking ``put`` when the queue is at capacity."""
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    """A submitted request riding through the scheduler."""
+
+    seq: int  # submission order, for deterministic tie-breaks
+    request: object  # PropagateRequest
+    future: Future  # resolved by the dispatch that serves it
+    t_submit: float  # perf_counter at accept, for latency metrics
+
+
+class RequestQueue:
+    """Bounded FIFO with atomic multi-item drain and cancel filtering."""
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._items: deque[QueueEntry] = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def put(self, entry: QueueEntry, block: bool = True, timeout: Optional[float] = None) -> None:
+        """Append ``entry``; raise :class:`QueueFull` if no space appears."""
+        with self._not_full:
+            if len(self._items) >= self.maxsize:
+                if not block:
+                    raise QueueFull(f"queue at capacity ({self.maxsize}); retry or raise max_queue")
+                has_room = lambda: len(self._items) < self.maxsize  # noqa: E731
+                if not self._not_full.wait_for(has_room, timeout=timeout):
+                    raise QueueFull(f"queue still full after {timeout}s; engine saturated")
+            self._items.append(entry)
+            self._not_empty.notify()
+
+    def wait_nonempty(self, timeout: Optional[float] = None) -> bool:
+        """Block until at least one entry is queued (or timeout); True if so."""
+        with self._not_empty:
+            return self._not_empty.wait_for(lambda: bool(self._items), timeout=timeout)
+
+    def wait_atleast(self, n: int, timeout: Optional[float] = None) -> bool:
+        """Block until ``>= n`` entries are queued (or timeout); True if so.
+
+        The scheduler's batching window: after the first request of an
+        iteration lands, linger briefly for the batch to fill before
+        dispatching a partial one.
+        """
+        with self._not_empty:
+            return self._not_empty.wait_for(lambda: len(self._items) >= n, timeout=timeout)
+
+    def drain(self, max_items: int) -> tuple[list[QueueEntry], list[QueueEntry]]:
+        """Atomically pop up to ``max_items`` live entries (FIFO order).
+
+        Returns ``(live, cancelled)``: entries whose future was cancelled
+        while queued never reach a dispatch, but still free queue capacity
+        (and don't count against ``max_items``).
+        """
+        live: list[QueueEntry] = []
+        cancelled: list[QueueEntry] = []
+        with self._not_full:
+            while self._items and len(live) < max_items:
+                entry = self._items.popleft()
+                if entry.future.cancelled():
+                    cancelled.append(entry)
+                    continue
+                live.append(entry)
+            if live or cancelled:
+                self._not_full.notify_all()
+        return live, cancelled

@@ -50,7 +50,8 @@ def adamw_init(params) -> AdamWState:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(leaf.astype(jnp.float32) ** 2)
+                        for leaf in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):

@@ -3,9 +3,7 @@
 accumulation loop), mixed precision, optional chunked-vocab loss."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

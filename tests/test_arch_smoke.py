@@ -9,9 +9,9 @@ import jax.numpy as jnp
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.models.transformer import init_lm, lm_forward
 from repro.models.whisper import encdec_forward, init_encdec
-from repro.serving.decode import decode_step, init_state, prefill
+from repro.serving.decode import decode_step, prefill
 from repro.training.optimizer import AdamWConfig
-from repro.training.train_step import init_train_state, lm_loss, make_train_step
+from repro.training.train_step import init_train_state, make_train_step
 
 B, S = 2, 32
 

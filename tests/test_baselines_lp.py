@@ -3,7 +3,6 @@ import sys
 from pathlib import Path
 
 import numpy as np
-import pytest
 
 import jax.numpy as jnp
 

@@ -58,9 +58,9 @@ def test_input_specs_cover_all_cells(arch, shape):
     assert meta["tokens_per_step"] > 0
     leaves = jax.tree_util.tree_leaves(kwargs)
     assert leaves, (arch, shape)
-    for l in leaves:
-        assert isinstance(l, jax.ShapeDtypeStruct)
-        assert all(d > 0 for d in l.shape)
+    for leaf in leaves:
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert all(d > 0 for d in leaf.shape)
     if sp.kind == "train":
         toks = kwargs["batch"]["tokens"]
         assert toks.shape[0] == sp.global_batch

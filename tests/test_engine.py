@@ -1,0 +1,247 @@
+"""Continuous-batching engine: deterministic-scheduler parity, cancellation,
+backpressure, metrics, and the propagate_many alpha-canonicalization fix.
+
+The deterministic tests drive the scheduler synchronously (``start=False`` +
+``step``/``flush``) so every assertion is race-free; one threaded test and
+the slow soak exercise the background-thread path end to end.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving.engine import PropagateEngine
+from repro.serving.propagate import (PropagateRequest, canonical_alpha,
+                                     group_key, propagate_many)
+from repro.serving.queue import QueueFull
+
+ITERS = 8  # plenty for parity, cheap enough for tier-1
+
+
+def _random_requests(rng, n, count, widths=(1, 2, 3, 4, 6),
+                     alphas=(0.01, 0.05, 0.2), iters=(ITERS,)):
+    reqs = []
+    for _ in range(count):
+        c = int(rng.choice(widths))
+        y0 = (rng.rand(n, c) > 0.8).astype(np.float32)
+        reqs.append(PropagateRequest(
+            y0, alpha=float(rng.choice(alphas)),
+            n_iters=int(rng.choice(iters))))
+    return reqs
+
+
+# ------------------------------------------------------------ parity chain
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_matches_propagate_many_and_single(small_fitted_vdt, seed):
+    """engine == propagate_many == per-request label_propagate, any arrival
+    order / width mix / alpha mix."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(seed)
+    reqs = _random_requests(rng, x.shape[0], count=11)
+
+    eng = PropagateEngine(vdt, start=False, max_batch=4)
+    futs = [eng.submit(q) for q in reqs]
+    eng.flush()
+    got = [np.asarray(f.result(timeout=0)) for f in futs]
+
+    via_many = propagate_many(vdt, reqs)
+    for g, m, req in zip(got, via_many, reqs):
+        assert g.shape == req.y0.shape
+        np.testing.assert_allclose(g, np.asarray(m), rtol=1e-5, atol=1e-6)
+        single = vdt.label_propagate(req.y0, alpha=req.alpha,
+                                     n_iters=req.n_iters)
+        np.testing.assert_allclose(g, np.asarray(single),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_mixed_n_iters_and_submit_order(small_fitted_vdt):
+    """Requests differing only in n_iters never share a dispatch but still
+    come back right, whatever order they were submitted in."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(3)
+    reqs = _random_requests(rng, x.shape[0], count=8, iters=(4, ITERS))
+    order = rng.permutation(len(reqs))
+
+    eng = PropagateEngine(vdt, start=False, max_batch=8)
+    futs = {i: eng.submit(reqs[i]) for i in order}
+    eng.flush()
+    for i, req in enumerate(reqs):
+        single = vdt.label_propagate(req.y0, alpha=req.alpha,
+                                     n_iters=req.n_iters)
+        np.testing.assert_allclose(np.asarray(futs[i].result(timeout=0)),
+                                   np.asarray(single), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_threaded_end_to_end(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(4)
+    reqs = _random_requests(rng, x.shape[0], count=12)
+    want = propagate_many(vdt, reqs)
+
+    with PropagateEngine(vdt, max_batch=4, max_wait_ms=1.0) as eng:
+        futs = [eng.submit(q) for q in reqs]
+        for f, w in zip(futs, want):
+            np.testing.assert_allclose(np.asarray(f.result(timeout=60)),
+                                       np.asarray(w), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------- cancellation / errors
+def test_cancellation_before_dispatch(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(5)
+    reqs = _random_requests(rng, x.shape[0], count=4, widths=(2,))
+
+    eng = PropagateEngine(vdt, start=False)
+    futs = [eng.submit(q) for q in reqs]
+    assert futs[1].cancel() and futs[2].cancel()
+    eng.flush()
+
+    assert futs[1].cancelled() and futs[2].cancelled()
+    for i in (0, 3):
+        single = vdt.label_propagate(reqs[i].y0, alpha=reqs[i].alpha,
+                                     n_iters=reqs[i].n_iters)
+        np.testing.assert_allclose(np.asarray(futs[i].result(timeout=0)),
+                                   np.asarray(single), rtol=1e-5, atol=1e-6)
+    m = eng.metrics()
+    assert m.cancelled == 2 and m.completed == 2
+    assert m.batched_requests == 2  # cancelled entries never hit a dispatch
+
+
+def test_submit_rejects_bad_shapes(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, start=False)
+    with pytest.raises(ValueError):
+        eng.submit(PropagateRequest(np.zeros((x.shape[0] + 1, 2), np.float32)))
+    with pytest.raises(ValueError):  # wider than the largest bucket
+        eng.submit(PropagateRequest(np.zeros((x.shape[0], 129), np.float32)))
+    assert eng.metrics().submitted == 0
+
+
+# ------------------------------------------------------------- backpressure
+def test_backpressure_bounded_queue(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 2), np.float32)
+    eng = PropagateEngine(vdt, start=False, max_queue=2)
+    eng.submit(PropagateRequest(y0, n_iters=2), block=False)
+    eng.submit(PropagateRequest(y0, n_iters=2), block=False)
+    with pytest.raises(QueueFull):
+        eng.submit(PropagateRequest(y0, n_iters=2), block=False)
+    with pytest.raises(QueueFull):  # blocking submit with a timeout
+        eng.submit(PropagateRequest(y0, n_iters=2), timeout=0.01)
+    m = eng.metrics()
+    assert m.rejected == 2 and m.queue_depth == 2
+
+    eng.step()  # drain frees capacity; submits flow again
+    eng.submit(PropagateRequest(y0, n_iters=2), block=False)
+    eng.flush()
+    assert eng.metrics().completed == 3
+
+
+def test_blocked_submit_unblocks_on_drain(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    eng = PropagateEngine(vdt, start=False, max_queue=1)
+    eng.submit(PropagateRequest(y0, n_iters=2), block=False)
+
+    accepted = threading.Event()
+
+    def blocked_producer():
+        eng.submit(PropagateRequest(y0, n_iters=2), timeout=30)
+        accepted.set()
+
+    t = threading.Thread(target=blocked_producer, daemon=True)
+    t.start()
+    assert not accepted.wait(0.05)  # genuinely blocked on the full queue
+    eng.step()
+    assert accepted.wait(30)
+    t.join()
+    eng.flush()
+    assert eng.metrics().completed == 2
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_snapshot_counters(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(6)
+    reqs = _random_requests(rng, x.shape[0], count=6, widths=(2, 3))
+
+    eng = PropagateEngine(vdt, start=False, max_batch=8)
+    for q in reqs:
+        eng.submit(q)
+    assert eng.metrics().queue_depth == 6
+    eng.flush()
+    m = eng.metrics()
+    assert m.submitted == m.completed == 6
+    assert m.queue_depth == 0 and m.in_flight == 0
+    # widths 2 and 3 both land in buckets <= 4 -> at most 2 dispatch groups
+    assert 1 <= m.dispatches <= 2
+    assert m.batch_occupancy >= 3.0
+    assert m.latency_p50_ms > 0 and m.latency_p95_ms >= m.latency_p50_ms
+
+
+# --------------------------------------- propagate_many alpha fragmentation
+def test_alpha_canonicalization_regression(small_fitted_vdt, monkeypatch):
+    """Near-equal alphas (0.01 vs 0.010000001) must share one dispatch —
+    the raw float(req.alpha) group key used to fragment them."""
+    x, vdt = small_fitted_vdt
+    assert canonical_alpha(0.01) == canonical_alpha(0.010000001)
+    assert group_key(0.01, 5, 2, (2, 4)) == group_key(0.010000001, 5, 2, (2, 4))
+    assert canonical_alpha(0.01) != canonical_alpha(0.02)
+
+    rng = np.random.RandomState(7)
+    y0 = (rng.rand(x.shape[0], 2) > 0.8).astype(np.float32)
+    reqs = [PropagateRequest(y0, alpha=0.01, n_iters=ITERS),
+            PropagateRequest(y0, alpha=0.010000001, n_iters=ITERS)]
+
+    calls = []
+    real_lp = vdt.label_propagate
+
+    def counting_lp(y0, *a, **kw):
+        if np.asarray(y0).ndim == 3:  # count dispatches, not the inner fold
+            calls.append(y0)
+        return real_lp(y0, *a, **kw)
+
+    monkeypatch.setattr(vdt, "label_propagate", counting_lp)
+    out = propagate_many(vdt, reqs)
+    assert len(calls) == 1, "near-equal alphas fragmented into dispatches"
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out[1]),
+                               rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------- soak
+@pytest.mark.slow
+def test_engine_soak_threaded(separated_clusters_vdt):
+    """Nightly soak: many closed-loop clients, mixed widths/alphas/iters,
+    every answer checked against the single-request path."""
+    x, _, vdt = separated_clusters_vdt
+    n = x.shape[0]
+    n_clients, per_client = 8, 12
+    errs = []
+
+    with PropagateEngine(vdt, max_batch=16, max_wait_ms=1.0,
+                         max_queue=64) as eng:
+        def client(cid):
+            rng = np.random.RandomState(100 + cid)
+            try:
+                for _ in range(per_client):
+                    req = _random_requests(rng, n, 1, iters=(4, 8))[0]
+                    got = np.asarray(eng.submit(req).result(timeout=120))
+                    want = np.asarray(vdt.label_propagate(
+                        req.y0, alpha=req.alpha, n_iters=req.n_iters))
+                    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+            except Exception as exc:  # surface in the main thread
+                errs.append(exc)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        m = eng.metrics()
+
+    assert not errs, errs[:1]
+    assert m.completed == n_clients * per_client
+    assert m.failed == 0
+    # continuous batching must actually batch under concurrent load
+    assert m.batch_occupancy > 1.5

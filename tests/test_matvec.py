@@ -9,7 +9,6 @@ from repro.core.blocks import coarsest_partition, densify_q
 from repro.core.matvec import mpt_matvec
 from repro.core.qopt import optimize_q
 from repro.core.refine import refine_to_budget
-from repro.core.sigma import sigma_init
 from repro.core.tree import build_tree
 
 

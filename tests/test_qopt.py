@@ -9,7 +9,6 @@ import jax.numpy as jnp
 from repro.core.baselines import exact_transition_matrix
 from repro.core.blocks import BlockPartition, coarsest_partition, densify_q
 from repro.core.qopt import lower_bound, optimize_q
-from repro.core.sigma import sigma_init
 from repro.core.tree import build_tree
 
 

@@ -1,7 +1,6 @@
 """Refinement gains (eq. 18-19), bound monotonicity, and bandwidth learning
 (eq. 12/14)."""
 import numpy as np
-import pytest
 
 import jax.numpy as jnp
 

@@ -1,7 +1,5 @@
 """Runtime substrate: checkpoint atomicity/roundtrip/elasticity, preemption,
 watchdog, gradient compression."""
-import json
-import os
 import subprocess
 import sys
 import textwrap

@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-import jax.numpy as jnp
 
 from repro.core.tree import build_tree, leaf_range, level_slice, node_level
 

@@ -17,6 +17,16 @@ Two entry points:
   (LP is column-independent, so a per-column alpha is exact).  The whole
   scan runs in leaf order: the row<->leaf permutation is applied once
   outside the scan instead of a gather + scatter per iteration.
+
+A third entry point, :func:`lp_scan_fused`, is the **exact** counterpart of
+``lp_scan_leaforder``: the same eq.-15 recursion against the exact
+transition matrix P (paper eq. 3) instead of the VDT approximation Q,
+served by the distance-reusing fused Pallas kernel — O(N * block) memory,
+and for a batched ``(B, N, C)`` stack each pairwise-distance tile is
+computed once per iteration for all B requests.  It backs
+``VariationalDualTree.label_propagate(backend="exact")`` and the serving
+engine's ``backend="exact"`` mode (accuracy-validation traffic at sizes
+where dense P would not fit).
 """
 from __future__ import annotations
 
@@ -29,7 +39,8 @@ import numpy as np
 
 from repro.core.matvec import mpt_matvec_leaforder
 
-__all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder", "ccr"]
+__all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
+           "lp_scan_fused", "ccr"]
 
 
 def one_hot_labels(
@@ -83,6 +94,52 @@ def lp_scan_leaforder(
 
     y, _ = jax.lax.scan(step, y0_leaf, None, length=n_iters)
     return y
+
+
+def lp_scan_fused(
+    x: jax.Array,            # (N, d) points
+    y0: jax.Array,           # (N,), (N, C) or (batch, N, C) seed labels
+    sigma: float,
+    alpha=0.01,
+    n_iters: int = 500,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+) -> jax.Array:
+    """Eq. 15 against the EXACT transition matrix, streamed, never dense.
+
+    The fused-kernel twin of :func:`lp_scan_leaforder`: every iteration is
+    one pass of the distance-reusing Pallas kernel (see
+    ``kernels/fused_lp/batched.py``), so P is never materialized and a
+    batched ``(batch, N, C)`` stack pays the pairwise-distance/softmax work
+    once per iteration for the whole batch, not once per request.
+
+    ``alpha`` is traced: a scalar, per-column ``(C,)`` (2-D ``y0``), or
+    per-request ``(batch,)`` (3-D ``y0``).  ``sigma``, ``n_iters`` and the
+    block sizes are static; repeated calls with the same shapes hit the
+    jit cache.  Returns the final labels in ``y0``'s shape.
+    """
+    # deferred so importing core never pulls the Pallas toolchain eagerly
+    from repro.kernels.fused_lp import fused_lp_scan_batched, fused_lp_scan_folded
+
+    y0 = jnp.asarray(y0)
+    if not jnp.issubdtype(y0.dtype, jnp.floating):
+        y0 = y0.astype(jnp.float32)
+    sigma = float(sigma)
+    if y0.ndim == 3:
+        batch = y0.shape[0]
+        alpha = jnp.asarray(alpha, jnp.float32)
+        if alpha.ndim == 1 and alpha.shape[0] != batch:
+            raise ValueError(
+                f"per-request alpha wants shape ({batch},), got {alpha.shape}")
+        return fused_lp_scan_batched(x, y0, sigma, alpha, int(n_iters),
+                                     block_m=block_m, block_n=block_n)
+    squeeze = y0.ndim == 1
+    if squeeze:
+        y0 = y0[:, None]
+    out = fused_lp_scan_folded(x, y0, sigma, jnp.asarray(alpha, jnp.float32),
+                               int(n_iters), block_m=block_m, block_n=block_n)
+    return out[:, 0] if squeeze else out
 
 
 @functools.partial(jax.jit, static_argnames=())

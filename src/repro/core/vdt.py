@@ -25,7 +25,7 @@ from repro.core import matvec as matvec_mod
 from repro.core import qopt as qopt_mod
 from repro.core import refine as refine_mod
 from repro.core import sigma as sigma_mod
-from repro.core.label_prop import lp_scan_leaforder
+from repro.core.label_prop import lp_scan_fused, lp_scan_leaforder
 from repro.core.tree import PartitionTree, build_tree
 
 __all__ = ["VariationalDualTree", "VdtStats"]
@@ -53,6 +53,10 @@ class VariationalDualTree:
     # lazily and reused across serving calls / scheduler iterations; q never
     # changes between refinements so re-deriving it per call is pure waste.
     _serve_cache: Optional[tuple] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    # points in original row order (exact-backend LP reads them); derived
+    # from the tree's leaf-order copy once and reused
+    _x_rows_cache: Optional[jax.Array] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ fit
@@ -132,6 +136,13 @@ class VariationalDualTree:
             self._serve_cache = (a, b, active, q, mask)
         return self._serve_cache
 
+    @property
+    def x_rows(self) -> jax.Array:
+        """The fitted points in original row order, (N, d), cached on device."""
+        if self._x_rows_cache is None:
+            self._x_rows_cache = self.tree.x_leaf[self.tree.slot_of]
+        return self._x_rows_cache
+
     def matvec(self, y) -> jax.Array:
         """Q @ y in O(|B| + N) (Algorithm 1).
 
@@ -152,7 +163,8 @@ class VariationalDualTree:
         )
 
     def label_propagate(self, y0, alpha=0.01, n_iters: int = 500,
-                        batched: Optional[bool] = None):
+                        batched: Optional[bool] = None,
+                        backend: str = "vdt"):
         """Label propagation (eq. 15) from seed labels ``y0``.
 
         ``y0`` may be a single ``(N, C)`` label matrix or a stacked
@@ -168,14 +180,32 @@ class VariationalDualTree:
         one dispatch.  Alpha is a *traced* argument of the underlying jitted
         scan: serving different alphas never grows the compile cache.
 
-        The scan runs in leaf order end-to-end (``lp_scan_leaforder``): the
-        row<->leaf permutation costs one scatter + one gather per *call*
-        instead of per iteration, and the jitted executable is cached per
-        ``(n_iters, shape)`` so steady-state serving pays dispatch only.
+        ``backend`` selects the transition matrix the walk runs on:
+
+        * ``"vdt"`` (default) — the fitted O(|B|) approximation Q.  The scan
+          runs in leaf order end-to-end (``lp_scan_leaforder``): the
+          row<->leaf permutation costs one scatter + one gather per *call*
+          instead of per iteration, and the jitted executable is cached per
+          ``(n_iters, shape)`` so steady-state serving pays dispatch only.
+        * ``"exact"`` — the exact eq.-3 matrix P, streamed through the
+          distance-reusing fused Pallas kernel (``lp_scan_fused``): P is
+          never materialized, and a batched stack pays the
+          pairwise-distance/softmax work once per iteration for ALL
+          requests.  O(N^2 d) per iteration — the accuracy-validation path,
+          not the large-N serving path.
         """
         y0 = jnp.asarray(y0)
         if not jnp.issubdtype(y0.dtype, jnp.floating):
             y0 = y0.astype(jnp.float32)
+        if backend not in ("vdt", "exact"):
+            raise ValueError(
+                f"backend must be 'vdt' or 'exact', got {backend!r}")
+        if backend == "exact":
+            if batched and y0.ndim != 3:
+                raise ValueError(
+                    f"batched label_propagate wants (batch, N, C), got {y0.shape}")
+            return lp_scan_fused(self.x_rows, y0, float(self.sigma), alpha,
+                                 int(n_iters))
         if batched is None:
             batched = y0.ndim == 3
         if batched:

@@ -2,16 +2,46 @@
 
 All wrappers fall back to Pallas interpret mode off-TPU so the same call
 sites run (slowly but correctly) on CPU test environments.
+
+Batched dispatch
+----------------
+``fused_lp_step_batched`` / ``fused_lp_matvec_batched`` default to the
+**distance-reusing** layout (``reuse=True``): the batch folds into the
+channel axis so each pairwise-distance tile and its online-softmax
+normalizer is computed once for all ``B`` right-hand sides (see
+``batched.py``).  ``reuse=False`` selects the legacy per-batch-recompute
+grid ``(B, M, N)`` — kept so the bench gate can measure the reuse win and
+parity tests can pin both layouts to the dense reference.
+
+On the reuse path ``alpha`` is a *traced* scalar or per-request ``(B,)``
+array (serving different alphas never recompiles); the legacy path bakes a
+static float ``alpha`` into the kernel as before.
+
+``fused_lp_scan_batched`` / ``fused_lp_scan_folded`` run the whole
+``n_iters`` LP recursion in one jitted ``lax.scan`` with ``Y`` resident on
+device in the folded layout — the multi-iteration form the exact serving
+backend (``core.label_prop.lp_scan_fused``) dispatches to.
 """
 import functools
 
 import jax
 
-from repro.kernels.fused_lp.batched import fused_lp_step_batched_kernel
+from repro.kernels.fused_lp.batched import (
+    fused_lp_scan_batched_reuse_kernel,
+    fused_lp_scan_folded_kernel,
+    fused_lp_step_batched_kernel,
+    fused_lp_step_batched_reuse_kernel,
+    fused_lp_step_folded_kernel,
+)
 from repro.kernels.fused_lp.fused_lp import fused_lp_matvec_kernel
 
 __all__ = ["fused_lp_matvec", "fused_lp_matvec_batched",
-           "fused_lp_step_batched"]
+           "fused_lp_step_batched", "fused_lp_step_folded",
+           "fused_lp_scan_folded", "fused_lp_scan_batched"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit,
@@ -20,24 +50,85 @@ def fused_lp_matvec(x, y, sigma: float, block_m: int = 256,
                     block_n: int = 256):
     return fused_lp_matvec_kernel(
         x, y, sigma, block_m=block_m, block_n=block_n,
-        interpret=jax.default_backend() != "tpu")
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("sigma", "alpha", "block_m", "block_n"))
-def fused_lp_step_batched(x, y, y0, sigma: float, alpha: float = 0.01,
-                          block_m: int = 256, block_n: int = 256):
-    """One fused eq.-15 LP update for a (B, N, C) stack of label matrices."""
-    return fused_lp_step_batched_kernel(
-        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
-        interpret=jax.default_backend() != "tpu")
+        interpret=_interpret())
 
 
 @functools.partial(jax.jit,
                    static_argnames=("sigma", "block_m", "block_n"))
-def fused_lp_matvec_batched(x, ys, sigma: float, block_m: int = 256,
-                            block_n: int = 256):
-    """P @ Y[b] for a (B, N, C) stack; alpha=1 degenerates the LP step."""
+def fused_lp_step_folded(x, y, y0, sigma: float, alpha=1.0,
+                         block_m: int = 256, block_n: int = 256):
+    """One eq.-15 step in the folded (N, K) layout, distances computed once.
+
+    ``alpha`` is traced: a scalar or a per-column ``(K,)`` array.
+    """
+    return fused_lp_step_folded_kernel(
+        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "block_m", "block_n"))
+def _step_batched_reuse(x, y, y0, sigma: float, alpha,
+                        block_m: int = 256, block_n: int = 256):
+    return fused_lp_step_batched_reuse_kernel(
+        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "alpha", "block_m", "block_n"))
+def _step_batched_perbatch(x, y, y0, sigma: float, alpha: float,
+                           block_m: int = 256, block_n: int = 256):
     return fused_lp_step_batched_kernel(
-        x, ys, ys, sigma, 1.0, block_m=block_m, block_n=block_n,
-        interpret=jax.default_backend() != "tpu")
+        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
+        interpret=_interpret())
+
+
+def fused_lp_step_batched(x, y, y0, sigma: float, alpha=0.01,
+                          block_m: int = 256, block_n: int = 256,
+                          reuse: bool = True):
+    """One fused eq.-15 LP update for a (B, N, C) stack of label matrices.
+
+    ``reuse=True`` (default) computes each distance tile once for the whole
+    batch and accepts a traced scalar or per-request ``(B,)`` ``alpha``;
+    ``reuse=False`` is the legacy per-batch-recompute kernel, which requires
+    a static float ``alpha``.
+    """
+    if reuse:
+        return _step_batched_reuse(x, y, y0, sigma, alpha,
+                                   block_m=block_m, block_n=block_n)
+    return _step_batched_perbatch(x, y, y0, sigma, float(alpha),
+                                  block_m=block_m, block_n=block_n)
+
+
+def fused_lp_matvec_batched(x, ys, sigma: float, block_m: int = 256,
+                            block_n: int = 256, reuse: bool = True):
+    """P @ Y[b] for a (B, N, C) stack; alpha=1 degenerates the LP step."""
+    if reuse:
+        return _step_batched_reuse(x, ys, ys, sigma, 1.0,
+                                   block_m=block_m, block_n=block_n)
+    return _step_batched_perbatch(x, ys, ys, sigma, 1.0,
+                                  block_m=block_m, block_n=block_n)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "n_iters", "block_m", "block_n"))
+def fused_lp_scan_folded(x, y0, sigma: float, alpha, n_iters: int,
+                         block_m: int = 256, block_n: int = 256):
+    """``n_iters`` fused eq.-15 steps, Y resident on device in folded layout."""
+    return fused_lp_scan_folded_kernel(
+        x, y0, sigma, alpha, int(n_iters), block_m=block_m, block_n=block_n,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "n_iters", "block_m", "block_n"))
+def fused_lp_scan_batched(x, y0s, sigma: float, alpha, n_iters: int,
+                          block_m: int = 256, block_n: int = 256):
+    """Whole batched LP run over a (B, N, C) stack: fold once, scan, unfold.
+
+    ``alpha`` is a traced scalar or per-request ``(B,)`` array.
+    """
+    return fused_lp_scan_batched_reuse_kernel(
+        x, y0s, sigma, alpha, int(n_iters),
+        block_m=block_m, block_n=block_n, interpret=_interpret())

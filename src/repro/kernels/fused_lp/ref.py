@@ -5,7 +5,8 @@ import jax.numpy as jnp
 from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec
 
 __all__ = ["fused_lp_matvec_ref", "fused_lp_matvec_dense_ref",
-           "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref"]
+           "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref",
+           "fused_lp_scan_batched_ref"]
 
 
 def fused_lp_matvec_ref(x, y, sigma):
@@ -26,3 +27,19 @@ def fused_lp_matvec_batched_ref(x, ys, sigma):
 def fused_lp_step_batched_ref(x, ys, y0s, sigma, alpha):
     """alpha * P @ Y[b] + (1 - alpha) * Y0[b] via the dense P (eq. 15)."""
     return alpha * fused_lp_matvec_batched_ref(x, ys, sigma) + (1.0 - alpha) * y0s
+
+
+def fused_lp_scan_batched_ref(x, y0s, sigma, alpha, n_iters):
+    """``n_iters`` dense eq.-15 iterations over a (B, N, C) stack.
+
+    ``alpha`` may be a scalar or a per-request ``(B,)`` array (broadcast over
+    rows and channels) — the oracle for the multi-iteration reuse kernel.
+    """
+    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if alpha.ndim == 1:
+        alpha = alpha[:, None, None]
+    y = y0s
+    for _ in range(int(n_iters)):
+        y = alpha * jnp.einsum("ij,bjc->bic", p, y) + (1.0 - alpha) * y0s
+    return y

@@ -36,6 +36,18 @@ thread's loop body otherwise):
    ``label_propagate``, slice each answer back to its true width, and
    resolve the futures.
 
+Backends
+--------
+Every dispatch runs against the engine's configured transition-matrix
+``backend``.  ``"vdt"`` (default) serves the fitted O(|B|) approximation —
+the production path.  ``"exact"`` serves the exact eq.-3 matrix through the
+distance-reusing fused kernel (``core.label_prop.lp_scan_fused``): the
+coalesced group shares one streaming pass per LP iteration, so the
+pairwise-distance/softmax work — the reason exact LP was ever expensive to
+batch — is paid once per iteration for the whole group instead of once per
+request.  Use it for accuracy-validation or ground-truth traffic at sizes
+where O(N^2 d) per iteration is acceptable.
+
 Compile-cache bound
 -------------------
 Jitted executables are keyed by ``(n_iters, N, batch bucket * width
@@ -103,6 +115,9 @@ class PropagateEngine:
     buckets:     label-width buckets, shared with ``propagate_many``.
     coalesce_widths: pad a whole group to its largest width bucket so mixed
                  widths share one dispatch (default; see module docstring).
+    backend:     ``"vdt"`` (fitted approximation, default) or ``"exact"``
+                 (streamed exact P via the distance-reusing fused kernel);
+                 see *Backends* in the module docstring.
     start:       spawn the background scheduler thread.  ``start=False``
                  leaves scheduling to explicit ``step``/``flush`` calls —
                  deterministic, single-threaded, what the unit tests drive.
@@ -117,11 +132,16 @@ class PropagateEngine:
         max_queue: int = 256,
         buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
         coalesce_widths: bool = True,
+        backend: str = "vdt",
         start: bool = True,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if backend not in ("vdt", "exact"):
+            raise ValueError(
+                f"backend must be 'vdt' or 'exact', got {backend!r}")
         self.vdt = vdt
+        self.backend = backend
         self.n = int(vdt.tree.n_points)
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
@@ -171,7 +191,7 @@ class PropagateEngine:
                     out = self.vdt.label_propagate(
                         np.zeros((bb, self.n, cb), np.float32),
                         alpha=np.zeros((bb,), np.float32),
-                        n_iters=int(ni), batched=True)
+                        n_iters=int(ni), batched=True, backend=self.backend)
                     jax.block_until_ready(out)
                     count += 1
         return count
@@ -312,7 +332,8 @@ class PropagateEngine:
                     stack[k, :, :y0.shape[1]] = y0
                     alphas[k] = entry.request.alpha
                 out = self.vdt.label_propagate(
-                    stack, alpha=alphas, n_iters=n_iters, batched=True)
+                    stack, alpha=alphas, n_iters=n_iters, batched=True,
+                    backend=self.backend)
                 jax.block_until_ready(out)
             except Exception as exc:  # resolve the group, keep scheduling
                 for entry in group:
@@ -338,7 +359,16 @@ class PropagateEngine:
             queue_depth=len(self._queue), in_flight=in_flight)
 
     def shutdown(self, wait: bool = True) -> None:
-        """Stop accepting work; serve (``wait=True``) or cancel the backlog."""
+        """Stop accepting work; serve (``wait=True``) or cancel the backlog.
+
+        Idempotent.  New ``submit`` calls raise ``RuntimeError`` immediately;
+        the background scheduler thread (if any) is joined before the
+        backlog is handled, so after return no dispatch is in flight.
+        ``wait=False`` cancels every queued future instead of serving it
+        (counted under ``cancelled`` in the metrics).  Also invoked by the
+        context manager: ``__exit__`` serves the backlog on a clean exit and
+        cancels it when unwinding an exception.
+        """
         if self._closed:
             return
         self._closed = True

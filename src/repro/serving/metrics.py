@@ -28,20 +28,31 @@ def _quantile(sorted_vals: list[float], q: float) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class MetricsSnapshot:
-    """Point-in-time view of engine health (all times milliseconds)."""
+    """Point-in-time view of engine health (all times milliseconds).
 
-    submitted: int = 0  # accepted into the queue
-    rejected: int = 0  # refused at submit (backpressure)
-    cancelled: int = 0  # cancelled before dispatch
+    Counter fields are monotone lifetime totals; gauge fields
+    (``queue_depth``, ``in_flight``) are instantaneous; latency quantiles
+    cover the newest :data:`LATENCY_WINDOW` completed requests, measured
+    from queue accept (``submit`` return) to future resolution — i.e. they
+    include queueing/linger time, not just device time.  Conservation:
+    every accepted request ends in exactly one of ``completed``, ``failed``
+    or ``cancelled`` (``submitted`` minus those three = queued or in
+    flight); ``rejected`` requests were never accepted and appear in no
+    other counter.
+    """
+
+    submitted: int = 0  # accepted into the queue (excludes rejected)
+    rejected: int = 0  # refused at submit: queue at capacity (backpressure)
+    cancelled: int = 0  # future.cancel() won before the dispatch started
     completed: int = 0  # futures resolved with a result
-    failed: int = 0  # futures resolved with an exception
+    failed: int = 0  # futures resolved with an exception (bad dispatch)
     dispatches: int = 0  # batched device dispatches issued
-    batched_requests: int = 0  # real requests covered by those dispatches
-    queue_depth: int = 0  # entries waiting right now
-    in_flight: int = 0  # drained but not yet completed
-    latency_p50_ms: float = float("nan")
-    latency_p95_ms: float = float("nan")
-    latency_mean_ms: float = float("nan")
+    batched_requests: int = 0  # real (non-padding) requests in those dispatches
+    queue_depth: int = 0  # entries waiting right now (gauge)
+    in_flight: int = 0  # drained but not yet resolved (gauge)
+    latency_p50_ms: float = float("nan")  # windowed submit->result median
+    latency_p95_ms: float = float("nan")  # windowed tail latency
+    latency_mean_ms: float = float("nan")  # windowed mean
 
     @property
     def batch_occupancy(self) -> float:

@@ -13,6 +13,18 @@ scheduler's access pattern:
 ``stdlib queue.Queue`` fits none of this: no multi-item atomic drain, no
 cancellation filtering, and its unfinished-task accounting is dead weight
 here.
+
+Concurrency contract
+--------------------
+All methods are thread-safe; any number of producer threads may ``put``
+concurrently.  The design assumes a SINGLE consumer (the engine's
+scheduler): ``wait_nonempty``/``wait_atleast`` + ``drain`` are only
+race-free in the sense that one consumer sees every entry exactly once —
+two concurrent drainers would simply split the backlog between them.
+Cancellation is cooperative: cancelling an entry's future while it is
+queued guarantees it never reaches a dispatch (the next ``drain`` discards
+it), but cancellation after a drain has returned the entry is the
+dispatcher's problem (see ``PropagateEngine._dispatch``).
 """
 from __future__ import annotations
 
@@ -56,7 +68,13 @@ class RequestQueue:
             return len(self._items)
 
     def put(self, entry: QueueEntry, block: bool = True, timeout: Optional[float] = None) -> None:
-        """Append ``entry``; raise :class:`QueueFull` if no space appears."""
+        """Append ``entry``; raise :class:`QueueFull` if no space appears.
+
+        ``block=False`` fails fast at capacity; ``block=True`` waits until a
+        drain frees space, up to ``timeout`` seconds (``None`` = forever).
+        This is the engine's backpressure surface: a saturated engine makes
+        producers either slow down (blocking) or shed load (QueueFull).
+        """
         with self._not_full:
             if len(self._items) >= self.maxsize:
                 if not block:

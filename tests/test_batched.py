@@ -15,6 +15,8 @@ from repro.core.matvec import (collect_up, mpt_matvec, mpt_matvec_batched,
                                mpt_matvec_leaforder)
 from repro.kernels.fused_lp import (fused_lp_matvec_batched,
                                     fused_lp_matvec_batched_ref,
+                                    fused_lp_scan_batched,
+                                    fused_lp_scan_batched_ref,
                                     fused_lp_step_batched,
                                     fused_lp_step_batched_ref)
 from repro.serving.propagate import PropagateRequest, propagate_many
@@ -147,6 +149,88 @@ def test_fused_batched_row_stochastic_action(rng):
     got = np.asarray(fused_lp_matvec_batched(x, ones, 1.0,
                                              block_m=16, block_n=16))
     np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+# ------------------------------------------ distance-reusing batched kernel
+@pytest.mark.parametrize("batch", [1, 3, 8])
+@pytest.mark.parametrize("c", [1, 2, 16])
+@pytest.mark.parametrize("n", [37])  # odd, non-power-of-two: exercises padding
+def test_reuse_kernel_matches_perbatch_and_dense(rng, batch, c, n):
+    """The distance-reusing layout == the per-batch-recompute layout == the
+    dense eq.-15 reference, across batch/width/ragged-N combinations."""
+    alpha, sigma = 0.05, 1.0
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    ys = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    y0s = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    reuse = np.asarray(fused_lp_step_batched(
+        x, ys, y0s, sigma, alpha, block_m=16, block_n=16, reuse=True))
+    perbatch = np.asarray(fused_lp_step_batched(
+        x, ys, y0s, sigma, alpha, block_m=16, block_n=16, reuse=False))
+    dense = np.asarray(fused_lp_step_batched_ref(x, ys, y0s, sigma, alpha))
+    np.testing.assert_allclose(reuse, perbatch, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(reuse, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_reuse_kernel_per_request_alpha(rng):
+    """A traced (B,) alpha folds to per-column and matches the dense ref."""
+    batch, n, c = 3, 40, 2
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    ys = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    y0s = jnp.asarray(rng.randn(batch, n, c), jnp.float32)
+    al = jnp.asarray([0.01, 0.2, 1.0], jnp.float32)
+    got = np.asarray(fused_lp_step_batched(x, ys, y0s, 1.0, al,
+                                           block_m=16, block_n=16))
+    want = (np.asarray(al)[:, None, None]
+            * np.asarray(fused_lp_matvec_batched_ref(x, ys, 1.0))
+            + (1.0 - np.asarray(al)[:, None, None]) * np.asarray(y0s))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_reuse_scan_matches_iterated_dense(rng):
+    """The multi-iteration reuse scan == explicit dense eq.-15 iterations."""
+    batch, n, c, iters = 2, 33, 3, 4
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    y0s = jnp.asarray((rng.rand(batch, n, c) > 0.8), jnp.float32)
+    al = jnp.asarray([0.05, 0.3], jnp.float32)
+    got = np.asarray(fused_lp_scan_batched(x, y0s, 1.0, al, iters,
+                                           block_m=16, block_n=16))
+    want = np.asarray(fused_lp_scan_batched_ref(x, y0s, 1.0, al, iters))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------ exact serving backend
+def test_label_propagate_exact_backend_matches_dense(small_fitted_vdt):
+    """backend='exact' runs eq. 15 on the exact P (streamed, never dense) —
+    parity with an explicit dense-P iteration at the fitted sigma."""
+    from repro.core.baselines import exact_transition_matrix
+
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    r = np.random.RandomState(5)
+    y0 = (r.rand(n, 3) > 0.8).astype(np.float32)
+    got = np.asarray(vdt.label_propagate(y0, alpha=0.1, n_iters=6,
+                                         backend="exact"))
+    p = np.asarray(exact_transition_matrix(jnp.asarray(x), vdt.sigma))
+    want = y0.copy()
+    for _ in range(6):
+        want = 0.1 * p @ want + 0.9 * y0
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    # batched with per-request alpha agrees with per-request exact calls
+    y0s = (r.rand(2, n, 2) > 0.8).astype(np.float32)
+    alphas = np.asarray([0.05, 0.2], np.float32)
+    got_b = np.asarray(vdt.label_propagate(y0s, alpha=alphas, n_iters=6,
+                                           backend="exact"))
+    for b in range(2):
+        want_b = np.asarray(vdt.label_propagate(
+            y0s[b], alpha=float(alphas[b]), n_iters=6, backend="exact"))
+        np.testing.assert_allclose(got_b[b], want_b, rtol=1e-5, atol=1e-5)
+
+
+def test_label_propagate_rejects_unknown_backend(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    with pytest.raises(ValueError):
+        vdt.label_propagate(np.zeros((33, 2), np.float32), backend="dense")
 
 
 # ------------------------------------------------------------ serving layer

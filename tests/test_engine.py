@@ -72,6 +72,30 @@ def test_engine_mixed_n_iters_and_submit_order(small_fitted_vdt):
                                    np.asarray(single), rtol=1e-5, atol=1e-6)
 
 
+def test_engine_exact_backend_matches_single(small_fitted_vdt):
+    """backend='exact' coalesces a mixed group through the distance-reusing
+    fused kernel; each answer equals its single exact label_propagate."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(9)
+    reqs = _random_requests(rng, x.shape[0], count=6, widths=(1, 2, 3))
+
+    eng = PropagateEngine(vdt, start=False, max_batch=4, backend="exact")
+    futs = [eng.submit(q) for q in reqs]
+    eng.flush()
+    for f, req in zip(futs, reqs):
+        single = vdt.label_propagate(req.y0, alpha=req.alpha,
+                                     n_iters=req.n_iters, backend="exact")
+        np.testing.assert_allclose(np.asarray(f.result(timeout=0)),
+                                   np.asarray(single), rtol=1e-5, atol=1e-5)
+    eng.shutdown()
+
+
+def test_engine_rejects_unknown_backend(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    with pytest.raises(ValueError):
+        PropagateEngine(vdt, start=False, backend="dense")
+
+
 def test_engine_threaded_end_to_end(small_fitted_vdt):
     x, vdt = small_fitted_vdt
     rng = np.random.RandomState(4)

@@ -5,7 +5,11 @@ import pytest
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
-from repro.kernels.fused_lp import fused_lp_matvec, fused_lp_matvec_dense_ref
+from repro.kernels.fused_lp import (fused_lp_matvec, fused_lp_matvec_dense_ref,
+                                    fused_lp_scan_batched_ref,
+                                    fused_lp_scan_folded,
+                                    fused_lp_step_batched_ref,
+                                    fused_lp_step_folded)
 from repro.kernels.pairwise import pairwise_sq_dists, pairwise_sq_dists_ref
 
 
@@ -63,6 +67,49 @@ def test_fused_lp_row_stochastic_action(rng):
     ones = jnp.ones((70, 1), jnp.float32)
     got = np.asarray(fused_lp_matvec(x, ones, 1.0, block_m=32, block_n=32))
     np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+# ----------------------------------------------- distance-reusing folded LP
+@pytest.mark.parametrize("n,k,sigma", [(40, 3, 1.0), (65, 8, 0.5), (33, 1, 2.0)])
+def test_fused_lp_step_folded_matches_dense(rng, n, k, sigma):
+    """The folded step (distances computed once for all K columns) equals the
+    dense eq.-15 update, scalar alpha."""
+    x = jnp.asarray(rng.randn(n, 5), jnp.float32)
+    y = jnp.asarray(rng.randn(n, k), jnp.float32)
+    y0 = jnp.asarray(rng.randn(n, k), jnp.float32)
+    got = fused_lp_step_folded(x, y, y0, sigma, 0.1, block_m=16, block_n=16)
+    want = fused_lp_step_batched_ref(x, y[None], y0[None], sigma, 0.1)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_fused_lp_step_folded_per_column_alpha(rng):
+    """A traced (K,) alpha applies per column — the layout per-request alphas
+    ride through after the batch folds into channels."""
+    n, k = 48, 4
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    y = jnp.asarray(rng.randn(n, k), jnp.float32)
+    y0 = jnp.asarray(rng.randn(n, k), jnp.float32)
+    al = jnp.asarray([0.0, 0.05, 0.5, 1.0], jnp.float32)
+    got = np.asarray(fused_lp_step_folded(x, y, y0, 1.0, al,
+                                          block_m=16, block_n=16))
+    py = np.asarray(fused_lp_matvec_dense_ref(x, y, 1.0))
+    want = np.asarray(al)[None, :] * py + (1.0 - np.asarray(al))[None, :] * np.asarray(y0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_iters", [1, 5])
+def test_fused_lp_scan_folded_matches_iterated_dense(rng, n_iters):
+    """The multi-iteration scan (Y resident in the folded padded layout)
+    equals n_iters explicit dense eq.-15 iterations within 1e-5."""
+    n, k = 37, 3  # non-power-of-two: padded rows must never leak back in
+    x = jnp.asarray(rng.randn(n, 4), jnp.float32)
+    y0 = jnp.asarray(rng.randn(n, k), jnp.float32)
+    got = fused_lp_scan_folded(x, y0, 1.0, jnp.float32(0.1), n_iters,
+                               block_m=16, block_n=16)
+    want = fused_lp_scan_batched_ref(x, y0[None], 1.0, 0.1, n_iters)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
 
 
 # --------------------------------------------------------- flash attention

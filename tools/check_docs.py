@@ -1,0 +1,172 @@
+"""Documentation checker: keep README.md / docs/*.md honest in CI.
+
+Three checks over every tracked markdown file (README.md and docs/*.md):
+
+1. **syntax** — every fenced ``python`` code block must ``compile()``;
+   pseudo-code must be explicitly opted out with a marker (below).
+2. **run** — blocks annotated with an HTML comment marker directly above
+   the fence are executed in a subprocess with ``PYTHONPATH=src`` and a
+   timeout, so the README quickstart keeps running as-is on a clean
+   checkout::
+
+       <!-- docs-check: run -->
+       ```python
+       ...executed by CI...
+       ```
+
+   ``<!-- docs-check: skip -->`` exempts a block from all checks
+   (illustrative fragments).
+3. **links** — every intra-repo markdown link ``[text](path)`` must point
+   at an existing file (resolved relative to the markdown file; ``#anchor``
+   suffixes stripped; ``http(s):``/``mailto:`` links ignored).
+
+Usage::
+
+    python tools/check_docs.py [--no-run] [--timeout SECONDS]
+
+Exits non-zero listing every failure.  ``tests/test_docs.py`` runs the same
+checks in tier-1 so breakage surfaces locally before CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+_MARKER_RE = re.compile(r"^\s*<!--\s*docs-check:\s*(\w+)\s*-->\s*$")
+# tolerant of info strings ("```python title=x"): anything after the
+# language word is ignored, so a fancier fence can't invert code/prose
+_FENCE_RE = re.compile(r"^```\s*([\w.+-]*)")
+_LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+
+def doc_files(root: Path = REPO_ROOT) -> list[Path]:
+    """The markdown files under contract: README.md plus docs/*.md."""
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("*.md")))
+    return files
+
+
+def extract_blocks(text: str) -> list[tuple[int, str, str, str]]:
+    """Fenced code blocks as ``(lineno, lang, tag, code)`` tuples.
+
+    ``tag`` is the ``docs-check:`` marker immediately above the fence
+    (``"run"``, ``"skip"``) or ``""`` when absent.
+    """
+    blocks = []
+    lines = text.splitlines()
+    pending = ""
+    i = 0
+    while i < len(lines):
+        marker = _MARKER_RE.match(lines[i])
+        if marker:
+            pending = marker.group(1)
+            i += 1
+            continue
+        fence = _FENCE_RE.match(lines[i])
+        if fence:
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            blocks.append((start + 1, fence.group(1) or "", pending,
+                           "\n".join(lines[start:j])))
+            pending = ""
+            i = j + 1
+            continue
+        if lines[i].strip():
+            pending = ""  # a marker only binds to the very next fence
+        i += 1
+    return blocks
+
+
+def check_code_blocks(path: Path, *, run: bool = True,
+                      timeout: float = 240.0) -> list[str]:
+    """Syntax-check python blocks; execute ``docs-check: run`` blocks."""
+    failures = []
+    for lineno, lang, tag, code in extract_blocks(path.read_text()):
+        if tag == "skip" or lang not in ("python", "py"):
+            continue
+        where = f"{path.relative_to(REPO_ROOT)}:{lineno}"
+        try:
+            compile(code, where, "exec")
+        except SyntaxError as exc:
+            failures.append(f"{where}: python block does not compile: {exc}")
+            continue
+        if tag == "run" and run:
+            env = dict(os.environ)
+            env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+            try:
+                proc = subprocess.run(
+                    [sys.executable, "-"], input=code, text=True,
+                    capture_output=True, timeout=timeout, env=env,
+                    cwd=REPO_ROOT)
+            except subprocess.TimeoutExpired:
+                failures.append(f"{where}: run block timed out after {timeout}s")
+                continue
+            if proc.returncode != 0:
+                tail = proc.stderr.strip().splitlines()[-8:]
+                failures.append(f"{where}: run block failed "
+                                f"(exit {proc.returncode}):\n  "
+                                + "\n  ".join(tail))
+    return failures
+
+
+def check_links(path: Path) -> list[str]:
+    """Every intra-repo link target must exist on disk."""
+    failures = []
+    text = path.read_text()
+    # don't validate links that only occur inside code fences
+    for _, _, _, code in extract_blocks(text):
+        text = text.replace(code, "")
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            failures.append(
+                f"{path.relative_to(REPO_ROOT)}: broken link -> {target}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-run", action="store_true",
+                    help="syntax/link checks only; skip executing run blocks")
+    ap.add_argument("--timeout", type=float, default=240.0,
+                    help="per-block execution timeout (seconds)")
+    args = ap.parse_args()
+
+    files = doc_files()
+    if not files:
+        print("no documentation files found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in files:
+        failures += check_code_blocks(path, run=not args.no_run,
+                                      timeout=args.timeout)
+        failures += check_links(path)
+    if failures:
+        print("docs-check FAILED:", file=sys.stderr)
+        for failure in failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    print(f"docs-check passed ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

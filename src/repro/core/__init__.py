@@ -9,6 +9,14 @@ from repro.core.baselines import (
     streaming_exact_matvec,
 )
 from repro.core.blocks import BlockPartition, coarsest_partition, validate_partition
+from repro.core.divergence import (
+    DIVERGENCES,
+    Divergence,
+    get_divergence,
+    mahalanobis,
+    register_divergence,
+    resolve_divergence,
+)
 from repro.core.label_prop import ccr, label_propagate, one_hot_labels
 from repro.core.matvec import mpt_matvec
 from repro.core.qopt import QState, optimize_q
@@ -19,6 +27,8 @@ from repro.core.vdt import VariationalDualTree
 
 __all__ = [
     "BlockPartition",
+    "DIVERGENCES",
+    "Divergence",
     "PartitionTree",
     "QState",
     "VariationalDualTree",
@@ -28,13 +38,17 @@ __all__ = [
     "coarsest_partition",
     "exact_transition_matrix",
     "fit_sigma_q",
+    "get_divergence",
     "knn_matvec",
+    "mahalanobis",
     "label_propagate",
     "mpt_matvec",
     "one_hot_labels",
     "optimize_q",
     "refine_to_budget",
     "refinement_gains",
+    "register_divergence",
+    "resolve_divergence",
     "sigma_init",
     "sigma_star",
     "streaming_exact_matvec",

@@ -105,6 +105,7 @@ def lp_scan_fused(
     *,
     block_m: int = 256,
     block_n: int = 256,
+    divergence=None,
 ) -> jax.Array:
     """Eq. 15 against the EXACT transition matrix, streamed, never dense.
 
@@ -115,13 +116,20 @@ def lp_scan_fused(
     once per iteration for the whole batch, not once per request.
 
     ``alpha`` is traced: a scalar, per-column ``(C,)`` (2-D ``y0``), or
-    per-request ``(batch,)`` (3-D ``y0``).  ``sigma``, ``n_iters`` and the
-    block sizes are static; repeated calls with the same shapes hit the
-    jit cache.  Returns the final labels in ``y0``'s shape.
+    per-request ``(batch,)`` (3-D ``y0``).  ``sigma``, ``n_iters``,
+    ``divergence`` and the block sizes are static; repeated calls with the
+    same shapes hit the jit cache — and distinct divergences always compile
+    distinct executables (the divergence is part of the jit key), so mixed
+    traffic cannot cross-contaminate the cache.  Returns the final labels
+    in ``y0``'s shape.
     """
     # deferred so importing core never pulls the Pallas toolchain eagerly
+    from repro.core.divergence import resolve_divergence
     from repro.kernels.fused_lp import fused_lp_scan_batched, fused_lp_scan_folded
 
+    # unwrap BoundDivergence (carries tree arrays, not hashable) to the
+    # hashable Divergence that rides as the static jit key
+    divergence = resolve_divergence(divergence)
     y0 = jnp.asarray(y0)
     if not jnp.issubdtype(y0.dtype, jnp.floating):
         y0 = y0.astype(jnp.float32)
@@ -133,12 +141,14 @@ def lp_scan_fused(
             raise ValueError(
                 f"per-request alpha wants shape ({batch},), got {alpha.shape}")
         return fused_lp_scan_batched(x, y0, sigma, alpha, int(n_iters),
-                                     block_m=block_m, block_n=block_n)
+                                     block_m=block_m, block_n=block_n,
+                                     divergence=divergence)
     squeeze = y0.ndim == 1
     if squeeze:
         y0 = y0[:, None]
     out = fused_lp_scan_folded(x, y0, sigma, jnp.asarray(alpha, jnp.float32),
-                               int(n_iters), block_m=block_m, block_n=block_n)
+                               int(n_iters), block_m=block_m, block_n=block_n,
+                               divergence=divergence)
     return out[:, 0] if squeeze else out
 
 

@@ -20,6 +20,18 @@ Closed-form recursion (re-derived; equivalent to Thiesson & Kim 2012, Alg. 3):
 Everything runs in log space over flat heap arrays; the level sweeps are
 O(log N) dense steps and the block ops are segment reductions — no recursion,
 no pointers.  Blocks are padded to capacity and masked with ``active``.
+
+Bregman generalization
+----------------------
+Every entry point takes ``divergence=`` (``None`` | registry name |
+``Divergence`` | ``BoundDivergence`` — see ``core/divergence.py``).  The
+default (``None`` / ``"sqeuclidean"``) is the paper's Gaussian kernel and
+stays bit-identical to the pre-Bregman implementation; any other divergence
+swaps the block distance ``D2_AB`` for the block Bregman divergence
+``D_AB`` (same eq.-9-style O(1) factorization) and the bound's Gaussian
+log-partition constant for the divergence's own.  Out-of-domain data (e.g.
+KL with non-positive coordinates) raises ``ValueError`` at bind time rather
+than silently producing NaNs.
 """
 from __future__ import annotations
 
@@ -29,6 +41,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.divergence import bind_divergence
 from repro.core.tree import PartitionTree
 
 __all__ = ["QState", "block_sq_dists", "optimize_q", "lower_bound", "block_log_G"]
@@ -46,20 +59,26 @@ class QState(NamedTuple):
     bound: jax.Array    # ()          variational lower bound l(D)
 
 
-def block_sq_dists(tree: PartitionTree, a: jax.Array, b: jax.Array) -> jax.Array:
-    """D2_AB from subtree statistics (paper eq. 9), O(1) per block."""
-    wa, wb = tree.W[a], tree.W[b]
-    d2 = wa * tree.S2[b] + wb * tree.S2[a] - 2.0 * (tree.S1[a] * tree.S1[b]).sum(-1)
-    return jnp.maximum(d2, 0.0)
+def block_sq_dists(tree: PartitionTree, a: jax.Array, b: jax.Array,
+                   divergence=None) -> jax.Array:
+    """Block divergence D_AB from subtree statistics, O(1) per block.
+
+    For the default Gaussian kernel this is D2_AB of paper eq. 9 (the name
+    is kept for API stability); for any other registered divergence it is
+    the block Bregman divergence via the generalized factorization in
+    ``core/divergence.py``.
+    """
+    return bind_divergence(divergence, tree).block_div(tree, a, b)
 
 
 def block_log_G(tree: PartitionTree, a: jax.Array, b: jax.Array,
-                active: jax.Array, sigma: jax.Array) -> jax.Array:
-    """G_AB = -D2/(2 s^2 W_A W_B); −inf on inactive/ghost blocks."""
+                active: jax.Array, sigma: jax.Array,
+                divergence=None) -> jax.Array:
+    """G_AB = -D_AB/(2 s^2 W_A W_B); −inf on inactive/ghost blocks."""
     wa, wb = tree.W[a], tree.W[b]
     ok = active & (wa > 0) & (wb > 0)
     denom = jnp.where(ok, 2.0 * sigma * sigma * wa * wb, 1.0)
-    g = -block_sq_dists(tree, a, b) / denom
+    g = -block_sq_dists(tree, a, b, divergence=divergence) / denom
     return jnp.where(ok, g, _NEG_INF)
 
 
@@ -74,7 +93,7 @@ def _segment_logsumexp(logits: jax.Array, segment_ids: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("L",))
-def _optimize_impl(W, log_z, sigma, dim, L: int):
+def _optimize_impl(W, log_z, log_part, L: int):
     n_nodes = W.shape[0]
 
     # ---- bottom-up: log Zt and Wbar --------------------------------------
@@ -121,10 +140,7 @@ def _optimize_impl(W, log_z, sigma, dim, L: int):
 
     # ---- bound ------------------------------------------------------------
     w_tot = W[0]
-    const = -w_tot * (
-        0.5 * dim * jnp.log(2.0 * jnp.pi * sigma * sigma)
-        + jnp.log(jnp.maximum(w_tot - 1.0, 1.0))
-    )
+    const = -w_tot * (log_part + jnp.log(jnp.maximum(w_tot - 1.0, 1.0)))
     bound = const + w_tot * log_zt[0]
     return log_v, log_zt, bound
 
@@ -135,17 +151,19 @@ def optimize_q(
     b: jax.Array,
     active: jax.Array,
     sigma: jax.Array,
+    divergence=None,
 ) -> QState:
     """Optimal block parameters q for the given partition and bandwidth."""
     n_nodes = tree.n_nodes
-    log_g = block_log_G(tree, a, b, active, sigma)
+    div = bind_divergence(divergence, tree)
+    log_g = block_log_G(tree, a, b, active, sigma, divergence=div)
     wb = tree.W[b]
     contrib = jnp.where(
         active & (wb > 0), jnp.log(jnp.maximum(wb, 1e-12)) + log_g, _NEG_INF
     )
     log_z = _segment_logsumexp(contrib, a, n_nodes)
-    log_v, log_zt, bound = _optimize_impl(tree.W, log_z, sigma,
-                                          jnp.asarray(tree.dim, jnp.float32), tree.L)
+    log_part = div.log_partition(jnp.asarray(tree.dim, jnp.float32), sigma)
+    log_v, log_zt, bound = _optimize_impl(tree.W, log_z, log_part, tree.L)
     log_q = jnp.where(
         jnp.isfinite(log_g) & jnp.isfinite(log_v[a]),
         log_v[a] + log_g - log_z[a],
@@ -161,17 +179,25 @@ def lower_bound(
     active: jax.Array,
     log_q: jax.Array,
     sigma: jax.Array,
+    divergence=None,
 ) -> jax.Array:
-    """l(D) (eq. 7) for *arbitrary* feasible q — used by tests/refinement."""
+    """l(D) (eq. 7) for *arbitrary* feasible q — used by tests/refinement.
+
+    With a non-default ``divergence`` the distance term uses the block
+    Bregman divergence and the constant uses that divergence's log-partition
+    term; a divergence/domain mismatch (e.g. KL over a tree fitted on
+    non-positive data) raises ``ValueError`` instead of returning NaN.
+    """
+    div = bind_divergence(divergence, tree)
     wa, wb = tree.W[a], tree.W[b]
     ok = active & (wa > 0) & (wb > 0) & jnp.isfinite(log_q)
     q = jnp.where(ok, jnp.exp(log_q), 0.0)
-    d2 = block_sq_dists(tree, a, b)
+    d2 = div.block_div(tree, a, b)
     dist_term = -jnp.where(ok, q * d2, 0.0).sum() / (2.0 * sigma * sigma)
     ent_term = -jnp.where(ok, wa * wb * q * log_q, 0.0).sum()
     w_tot = tree.W[0]
     const = -w_tot * (
-        0.5 * tree.dim * jnp.log(2.0 * jnp.pi * sigma * sigma)
+        div.log_partition(tree.dim, sigma)
         + jnp.log(jnp.maximum(w_tot - 1.0, 1.0))
     )
     return const + dist_term + ent_term

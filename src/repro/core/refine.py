@@ -53,6 +53,7 @@ def refinement_gains(
     active: jax.Array,
     log_q: jax.Array,
     sigma: jax.Array,
+    divergence=None,
 ) -> jax.Array:
     """Delta_h * (W_A W_B)^{-1}-free gains for all blocks; −inf if unrefinable.
 
@@ -63,9 +64,11 @@ def refinement_gains(
     b_internal = b < n_leaf_first
     bl = jnp.where(b_internal, 2 * b + 1, b)
     br = jnp.where(b_internal, 2 * b + 2, b)
-    log_g = block_log_G(tree, a, b, active, sigma)
-    log_gl = block_log_G(tree, a, bl, active, sigma)
-    log_gr = block_log_G(tree, a, br, active, sigma)
+    from repro.core.divergence import bind_divergence
+    div = bind_divergence(divergence, tree)  # bind stats once for all 3 calls
+    log_g = block_log_G(tree, a, b, active, sigma, divergence=div)
+    log_gl = block_log_G(tree, a, bl, active, sigma, divergence=div)
+    log_gr = block_log_G(tree, a, br, active, sigma, divergence=div)
     refinable = active & b_internal & (wa > 0) & (wb > 0)
     raw = _gains_impl(tree.W, log_g, log_gl, log_gr,
                       wb, tree.W[bl], tree.W[br], log_q, refinable)
@@ -134,6 +137,7 @@ def refine_to_budget(
     max_blocks: int,
     batch: int = 64,
     refit_sigma: bool = False,
+    divergence=None,
 ) -> Tuple[QState, jax.Array]:
     """Refine until ``n_active >= max_blocks``; returns final (QState, sigma).
 
@@ -141,24 +145,26 @@ def refine_to_budget(
     after every single refinement; batching amortizes this — measured in
     benchmarks/refinement.py).
     """
+    from repro.core.divergence import bind_divergence
     from repro.core.sigma import sigma_star  # local import to avoid cycle
 
+    div = bind_divergence(divergence, tree)
     qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
-                    jnp.asarray(bp.active), sigma)
+                    jnp.asarray(bp.active), sigma, divergence=div)
     while bp.n_active < max_blocks:
         k = min(batch, max(1, (max_blocks - bp.n_active) // 2))
         gains = refinement_gains(
             tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
-            qs.log_q, sigma,
+            qs.log_q, sigma, divergence=div,
         )
         done = refine_topk(bp, tree, np.asarray(gains), k)
         if done == 0:
             break
         qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
-                        jnp.asarray(bp.active), sigma)
+                        jnp.asarray(bp.active), sigma, divergence=div)
         if refit_sigma:
             sigma = sigma_star(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
-                               jnp.asarray(bp.active), qs.log_q)
+                               jnp.asarray(bp.active), qs.log_q, divergence=div)
             qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
-                            jnp.asarray(bp.active), sigma)
+                            jnp.asarray(bp.active), sigma, divergence=div)
     return qs, sigma

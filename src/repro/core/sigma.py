@@ -43,10 +43,16 @@ def sigma_star(
     b: jax.Array,
     active: jax.Array,
     log_q: jax.Array,
+    divergence=None,
 ) -> jax.Array:
-    """Eq. (12): closed-form optimal bandwidth given fixed q."""
+    """Eq. (12): closed-form optimal bandwidth given fixed q.
+
+    With a non-default ``divergence`` the numerator sums the block Bregman
+    divergences instead of squared distances — the same stationarity
+    condition of the generalized bound in ``sigma``.
+    """
     q = jnp.where(active & jnp.isfinite(log_q), jnp.exp(log_q), 0.0)
-    d2 = block_sq_dists(tree, a, b)
+    d2 = block_sq_dists(tree, a, b, divergence=divergence)
     num = (q * d2).sum()
     return jnp.sqrt(jnp.maximum(num, 1e-12) / (tree.dim * jnp.maximum(tree.W[0], 1.0)))
 
@@ -59,16 +65,20 @@ def fit_sigma_q(
     sigma0: jax.Array | float,
     max_iters: int = 20,
     tol: float = 1e-3,
+    divergence=None,
 ) -> Tuple[jax.Array, QState, int]:
     """Alternate eq. (7) q-optimization with eq. (12) until convergence."""
+    from repro.core.divergence import bind_divergence
+
+    div = bind_divergence(divergence, tree)  # bind stats once, reuse per iter
     sigma = jnp.asarray(sigma0, jnp.float32)
-    qs = optimize_q(tree, a, b, active, sigma)
+    qs = optimize_q(tree, a, b, active, sigma, divergence=div)
     it = 0
     for it in range(1, max_iters + 1):
-        new_sigma = sigma_star(tree, a, b, active, qs.log_q)
+        new_sigma = sigma_star(tree, a, b, active, qs.log_q, divergence=div)
         rel = abs(float(new_sigma) - float(sigma)) / max(float(sigma), 1e-12)
         sigma = new_sigma
-        qs = optimize_q(tree, a, b, active, sigma)
+        qs = optimize_q(tree, a, b, active, sigma, divergence=div)
         if rel < tol:
             break
     return sigma, qs, it

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocks as blocks_mod
+from repro.core import divergence as div_mod
 from repro.core import matvec as matvec_mod
 from repro.core import qopt as qopt_mod
 from repro.core import refine as refine_mod
@@ -40,6 +41,7 @@ class VdtStats:
     n_blocks: int = 0
     bound: float = 0.0
     sigma: float = 0.0
+    divergence: str = "sqeuclidean"
 
 
 @dataclasses.dataclass
@@ -49,6 +51,10 @@ class VariationalDualTree:
     qstate: qopt_mod.QState
     sigma: jax.Array
     stats: VdtStats
+    # the Bregman divergence this model was fitted under, bound to `tree`
+    # (block-stats precomputed); None means the default Gaussian kernel and
+    # is lazily normalized to the bound sqeuclidean divergence
+    divergence: Optional[div_mod.BoundDivergence] = None
     # device-resident dispatch buffers (a, b, active, q, leaf_mask), built
     # lazily and reused across serving calls / scheduler iterations; q never
     # changes between refinements so re-deriving it per call is pure waste.
@@ -71,15 +77,32 @@ class VariationalDualTree:
         refine_batch: int = 64,
         sigma_iters: int = 10,
         power_iters: int = 8,
+        divergence="sqeuclidean",
     ) -> "VariationalDualTree":
-        """Build tree + coarsest partition, fit sigma/q, refine to budget."""
-        stats = VdtStats()
+        """Build tree + coarsest partition, fit sigma/q, refine to budget.
+
+        ``divergence`` selects the Bregman divergence the similarity kernel
+        ``exp(-d(x_i, x_j) / 2 s^2)`` is built from — a registry name
+        (``"sqeuclidean"`` default, ``"kl"``, ``"itakura_saito"``,
+        ``"mahalanobis"``) or a :class:`~repro.core.divergence.Divergence`.
+        Positive-domain divergences (KL, Itakura-Saito) validate ``x`` up
+        front and raise ``ValueError`` on out-of-domain data.  ``sigma``
+        keeps its role as the kernel temperature; ``sigma_init`` stays the
+        Gaussian moment heuristic, which is only a starting scale for the
+        eq.-12 alternation.
+        """
+        div = div_mod.resolve_divergence(divergence)
+        div.validate_domain(x)  # fail fast, before any device work
+        stats = VdtStats(divergence=div.name)
         x = jnp.asarray(x, jnp.float32)
 
         t0 = time.perf_counter()
         tree = build_tree(x, weights, power_iters=power_iters)
         jax.block_until_ready(tree.W)
         stats.build_tree_s = time.perf_counter() - t0
+        # bind via the memo so later public-API calls with the name form
+        # reuse these stats instead of recomputing the O(N d) pass
+        bound_div = div_mod.bind_divergence(div, tree)
 
         cap = max_blocks if max_blocks else 2 * tree.n_internal
         bp = blocks_mod.coarsest_partition(tree, cap=int(2.5 * cap))
@@ -92,12 +115,13 @@ class VariationalDualTree:
         if learn_sigma and sigma is None:
             sig, qs, its = sigma_mod.fit_sigma_q(
                 tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
-                sig, max_iters=sigma_iters,
+                sig, max_iters=sigma_iters, divergence=bound_div,
             )
             stats.sigma_iters = its
         else:
             qs = qopt_mod.optimize_q(
-                tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active), sig
+                tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
+                sig, divergence=bound_div,
             )
         jax.block_until_ready(qs.log_q)
         stats.init_qopt_s = time.perf_counter() - t0
@@ -106,7 +130,7 @@ class VariationalDualTree:
             t0 = time.perf_counter()
             qs, sig = refine_mod.refine_to_budget(
                 bp, tree, sig, max_blocks, batch=refine_batch,
-                refit_sigma=learn_sigma,
+                refit_sigma=learn_sigma, divergence=bound_div,
             )
             jax.block_until_ready(qs.log_q)
             stats.refine_s = time.perf_counter() - t0
@@ -114,9 +138,22 @@ class VariationalDualTree:
         stats.n_blocks = bp.n_active
         stats.bound = float(qs.bound)
         stats.sigma = float(sig)
-        return cls(tree=tree, bp=bp, qstate=qs, sigma=sig, stats=stats)
+        return cls(tree=tree, bp=bp, qstate=qs, sigma=sig, stats=stats,
+                   divergence=bound_div)
 
     # ------------------------------------------------------------- inference
+    @property
+    def bound_divergence(self) -> div_mod.BoundDivergence:
+        """The fitted divergence, normalized (``None`` -> bound sqeuclidean)."""
+        if self.divergence is None:
+            self.divergence = div_mod.bind_divergence(None, self.tree)
+        return self.divergence
+
+    @property
+    def divergence_name(self) -> str:
+        """Registry name of the fitted divergence (serving dispatch keys)."""
+        return self.bound_divergence.name
+
     def _dispatch_buffers(self) -> tuple:
         """(a, b, active, q, leaf_mask) on device, cached across calls.
 
@@ -205,7 +242,8 @@ class VariationalDualTree:
                 raise ValueError(
                     f"batched label_propagate wants (batch, N, C), got {y0.shape}")
             return lp_scan_fused(self.x_rows, y0, float(self.sigma), alpha,
-                                 int(n_iters))
+                                 int(n_iters),
+                                 divergence=self.bound_divergence.div)
         if batched is None:
             batched = y0.ndim == 3
         if batched:
@@ -241,18 +279,45 @@ class VariationalDualTree:
     # ------------------------------------------------------------- utilities
     def refine(self, max_blocks: int, batch: int = 64) -> None:
         self.qstate, self.sigma = refine_mod.refine_to_budget(
-            self.bp, self.tree, self.sigma, max_blocks, batch=batch
+            self.bp, self.tree, self.sigma, max_blocks, batch=batch,
+            divergence=self.bound_divergence,
         )
         self._serve_cache = None  # a/b/q/active all changed
         self.stats.n_blocks = self.bp.n_active
         self.stats.bound = float(self.qstate.bound)
 
+    def _check_finite_q(self) -> None:
+        """Guard against a divergence/domain mismatch poisoning the model.
+
+        ``fit`` validates the data domain up front, but a hand-constructed
+        model (or one whose q-state was recomputed under the wrong
+        divergence) can carry NaN/-inf-everywhere q; surface that as a clear
+        error instead of silently emitting NaN results downstream.
+        """
+        bound = np.asarray(self.qstate.bound)
+        if not np.isfinite(bound):
+            raise ValueError(
+                f"non-finite variational state (bound={float(bound)}) under "
+                f"divergence {self.divergence_name!r} — likely a "
+                f"divergence/domain mismatch (e.g. 'kl' requires strictly "
+                f"positive inputs); refit with in-domain data or the "
+                f"right divergence")
+
     def dense_q(self) -> np.ndarray:
         """Dense (N, N) Q — small-N tests only."""
+        self._check_finite_q()
         q = np.asarray(
             jnp.where(jnp.isfinite(self.qstate.log_q), jnp.exp(self.qstate.log_q), 0.0)
         )
         return blocks_mod.densify_q(self.bp, self.tree, q)
+
+    def lower_bound(self, log_q=None) -> jax.Array:
+        """l(D) for ``log_q`` (default: the fitted q) under the fitted divergence."""
+        self._check_finite_q()
+        a, b, active, _, _ = self._dispatch_buffers()
+        lq = self.qstate.log_q if log_q is None else jnp.asarray(log_q)
+        return qopt_mod.lower_bound(self.tree, a, b, active, lq, self.sigma,
+                                    divergence=self.bound_divergence)
 
     @property
     def n_blocks(self) -> int:

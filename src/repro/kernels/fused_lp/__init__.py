@@ -4,7 +4,8 @@ from repro.kernels.fused_lp.ops import (fused_lp_matvec,
                                         fused_lp_scan_folded,
                                         fused_lp_step_batched,
                                         fused_lp_step_folded)
-from repro.kernels.fused_lp.ref import (fused_lp_matvec_batched_ref,
+from repro.kernels.fused_lp.ref import (dense_transition_ref,
+                                        fused_lp_matvec_batched_ref,
                                         fused_lp_matvec_dense_ref,
                                         fused_lp_matvec_ref,
                                         fused_lp_scan_batched_ref,
@@ -15,4 +16,4 @@ __all__ = ["fused_lp_matvec", "fused_lp_matvec_batched",
            "fused_lp_scan_folded", "fused_lp_scan_batched",
            "fused_lp_matvec_ref", "fused_lp_matvec_dense_ref",
            "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref",
-           "fused_lp_scan_batched_ref"]
+           "fused_lp_scan_batched_ref", "dense_transition_ref"]

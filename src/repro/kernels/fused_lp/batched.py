@@ -61,7 +61,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.matvec import fold_batch, unfold_batch
-from repro.kernels.fused_lp.fused_lp import NEG_BIG, stream_tile_update
+from repro.kernels.fused_lp.fused_lp import NEG_BIG, stream_tile_update, tile_config
 
 __all__ = [
     "fused_lp_step_batched_kernel",
@@ -75,7 +75,7 @@ __all__ = [
 # --------------------------------------------------- per-batch recompute path
 def _kernel(rows_ref, cols_ref, y_ref, y0_ref, o_ref, m_ref, s_ref, acc_ref,
             *, inv_two_sigma_sq: float, alpha: float, n_valid: int,
-            block_m: int, block_n: int):
+            block_m: int, block_n: int, tile_fn=None):
     i = pl.program_id(1)
     j = pl.program_id(2)
     ncols = pl.num_programs(2)
@@ -88,7 +88,8 @@ def _kernel(rows_ref, cols_ref, y_ref, y0_ref, o_ref, m_ref, s_ref, acc_ref,
 
     stream_tile_update(rows_ref, cols_ref, y_ref[0], m_ref, s_ref, acc_ref,
                        i, j, inv_two_sigma_sq=inv_two_sigma_sq,
-                       n_valid=n_valid, block_m=block_m, block_n=block_n)
+                       n_valid=n_valid, block_m=block_m, block_n=block_n,
+                       tile_fn=tile_fn)
 
     @pl.when(j == ncols - 1)
     def _finish():
@@ -107,18 +108,22 @@ def fused_lp_step_batched_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
-    """Per-batch-recompute baseline: grid (B, M, N), distances derived B times.
+    """Per-batch-recompute baseline: grid (B, M, N), divergences derived B times.
 
     Prefer :func:`fused_lp_step_batched_reuse_kernel`; this survives as the
     A/B reference the bench gate holds the reuse kernel's win against.
     """
+    tile_fn, pad, transform = tile_config(divergence)
+    if transform is not None:
+        x = transform(x)
     n, d = x.shape
     batch, _, c = y.shape
     mp = -(-n // block_m) * block_m
     np_ = -(-n // block_n) * block_n
-    xp_rows = jnp.pad(x, ((0, mp - n), (0, 0)))
-    xp_cols = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    xp_rows = jnp.pad(x, ((0, mp - n), (0, 0)), constant_values=pad)
+    xp_cols = jnp.pad(x, ((0, np_ - n), (0, 0)), constant_values=pad)
     yp = jnp.pad(y, ((0, 0), (0, np_ - n), (0, 0)))
     y0p = jnp.pad(y0, ((0, 0), (0, mp - n), (0, 0)))
 
@@ -126,7 +131,7 @@ def fused_lp_step_batched_kernel(
         _kernel,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
         alpha=float(alpha),
-        n_valid=n, block_m=block_m, block_n=block_n,
+        n_valid=n, block_m=block_m, block_n=block_n, tile_fn=tile_fn,
     )
     out = pl.pallas_call(
         kern,
@@ -152,7 +157,7 @@ def fused_lp_step_batched_kernel(
 # ----------------------------------------------------- distance-reusing path
 def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
                    m_ref, s_ref, acc_ref, *, inv_two_sigma_sq: float,
-                   n_valid: int, block_m: int, block_n: int):
+                   n_valid: int, block_m: int, block_n: int, tile_fn=None):
     i = pl.program_id(0)
     j = pl.program_id(1)
     ncols = pl.num_programs(1)
@@ -163,10 +168,11 @@ def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
         s_ref[...] = jnp.zeros_like(s_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # one distance tile + normalizer update for ALL folded columns at once
+    # one divergence tile + normalizer update for ALL folded columns at once
     stream_tile_update(rows_ref, cols_ref, y_ref[...], m_ref, s_ref, acc_ref,
                        i, j, inv_two_sigma_sq=inv_two_sigma_sq,
-                       n_valid=n_valid, block_m=block_m, block_n=block_n)
+                       n_valid=n_valid, block_m=block_m, block_n=block_n,
+                       tile_fn=tile_fn)
 
     @pl.when(j == ncols - 1)
     def _finish():
@@ -178,14 +184,15 @@ def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
 
 def _folded_call(xp_rows, xp_cols, yp, y0p, alpha_row, *,
                  inv_two_sigma_sq: float, n_valid: int,
-                 block_m: int, block_n: int, interpret: bool) -> jax.Array:
+                 block_m: int, block_n: int, interpret: bool,
+                 tile_fn=None) -> jax.Array:
     """pallas_call on already-padded folded operands; returns padded rows."""
     mp, d = xp_rows.shape
     np_ = xp_cols.shape[0]
     k = yp.shape[1]
     kern = functools.partial(
         _folded_kernel, inv_two_sigma_sq=inv_two_sigma_sq,
-        n_valid=n_valid, block_m=block_m, block_n=block_n,
+        n_valid=n_valid, block_m=block_m, block_n=block_n, tile_fn=tile_fn,
     )
     return pl.pallas_call(
         kern,
@@ -224,20 +231,25 @@ def fused_lp_step_folded_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
-    """One eq.-15 step in the folded layout; each distance tile computed once."""
+    """One eq.-15 step in the folded layout; each divergence tile computed once."""
+    tile_fn, pad, transform = tile_config(divergence)
+    if transform is not None:
+        x = transform(x)
     n, _ = x.shape
     k = y.shape[1]
     mp = -(-n // block_m) * block_m
     np_ = -(-n // block_n) * block_n
     out = _folded_call(
-        jnp.pad(x, ((0, mp - n), (0, 0))),
-        jnp.pad(x, ((0, np_ - n), (0, 0))),
+        jnp.pad(x, ((0, mp - n), (0, 0)), constant_values=pad),
+        jnp.pad(x, ((0, np_ - n), (0, 0)), constant_values=pad),
         jnp.pad(y, ((0, np_ - n), (0, 0))),
         jnp.pad(y0, ((0, mp - n), (0, 0))),
         _alpha_row(alpha, k),
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
         n_valid=n, block_m=block_m, block_n=block_n, interpret=interpret,
+        tile_fn=tile_fn,
     )
     return out[:n]
 
@@ -252,6 +264,7 @@ def fused_lp_step_batched_reuse_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
     """Distance-reusing batched eq.-15 step: fold, one grid pass, unfold."""
     batch, _, c = y.shape
@@ -262,6 +275,7 @@ def fused_lp_step_batched_reuse_kernel(
     out = fused_lp_step_folded_kernel(
         x, fold_batch(y), fold_batch(y0), sigma, alpha,
         block_m=block_m, block_n=block_n, interpret=interpret,
+        divergence=divergence,
     )
     return unfold_batch(out, batch, c)
 
@@ -277,6 +291,7 @@ def fused_lp_scan_folded_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
     """``n_iters`` fused eq.-15 steps with Y resident across iterations.
 
@@ -287,11 +302,14 @@ def fused_lp_scan_folded_kernel(
     garbage mid-scan, but the column mask (``col >= n_valid``) keeps them
     out of every accumulation; the final slice drops them.
     """
+    tile_fn, pad, transform = tile_config(divergence)
+    if transform is not None:
+        x = transform(x)
     n, _ = x.shape
     k = y0.shape[1]
     tile = math.lcm(block_m, block_n)
     sp = -(-n // tile) * tile
-    xp = jnp.pad(x, ((0, sp - n), (0, 0)))
+    xp = jnp.pad(x, ((0, sp - n), (0, 0)), constant_values=pad)
     y0p = jnp.pad(y0, ((0, sp - n), (0, 0)))
     al = _alpha_row(alpha, k)
     inv = float(1.0 / (2.0 * sigma * sigma))
@@ -299,7 +317,7 @@ def fused_lp_scan_folded_kernel(
     def step(y, _):
         y = _folded_call(xp, xp, y, y0p, al, inv_two_sigma_sq=inv,
                          n_valid=n, block_m=block_m, block_n=block_n,
-                         interpret=interpret)
+                         interpret=interpret, tile_fn=tile_fn)
         return y, None
 
     y, _ = jax.lax.scan(step, y0p, None, length=n_iters)
@@ -316,6 +334,7 @@ def fused_lp_scan_batched_reuse_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
     """Whole batched LP run: fold once, scan the reuse step, unfold once."""
     batch, _, c = y0.shape
@@ -325,5 +344,6 @@ def fused_lp_scan_batched_reuse_kernel(
     out = fused_lp_scan_folded_kernel(
         x, fold_batch(y0), sigma, alpha, n_iters,
         block_m=block_m, block_n=block_n, interpret=interpret,
+        divergence=divergence,
     )
     return unfold_batch(out, batch, c)

@@ -25,14 +25,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_lp_matvec_kernel", "stream_tile_update", "NEG_BIG"]
+__all__ = ["fused_lp_matvec_kernel", "stream_tile_update", "NEG_BIG",
+           "tile_config"]
 
 NEG_BIG = -1e30
 
 
+def tile_config(divergence):
+    """``(tile_fn, pad_value, transform)`` for a divergence spec.
+
+    ``tile_fn=None`` selects the inline squared-Euclidean tile in
+    :func:`stream_tile_update` — chosen for the default Gaussian (keeping it
+    bit-identical to the pre-Bregman kernels) AND for divergences that are
+    squared Euclidean after a point pre-map (e.g. Mahalanobis), whose
+    ``transform`` the caller applies to the point array *outside* the Pallas
+    body — tile functions must not close over array constants, which Pallas
+    kernels reject.  Other divergences (KL, Itakura-Saito) supply their
+    traced tile function plus the in-domain value points are padded with.
+    """
+    from repro.core.divergence import resolve_divergence
+
+    div = resolve_divergence(divergence)
+    if div.name == "sqeuclidean":
+        return None, 0.0, None  # identity transform: skip the extra op
+    if div.euclidean_after_transform:
+        return None, div.pad_value, div.transform_points
+    return div.tile, div.pad_value, div.transform_points
+
+
 def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
                        i, j, *, inv_two_sigma_sq: float, n_valid: int,
-                       block_m: int, block_n: int):
+                       block_m: int, block_n: int, tile_fn=None):
     """One column-tile step of the online-softmax streaming recurrence.
 
     Shared body of the single-RHS and batched fused-LP kernels: computes
@@ -40,13 +63,22 @@ def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
     normalizer s and accumulator acc (acc += p @ y_tile).  ``y_tile`` is
     the already-indexed (block_n, C) value tile.  Callers own scratch init
     (at j == 0) and the finishing epilogue (at the last j).
+
+    ``tile_fn`` generalizes the similarity: given the f32 ``(bm, d)`` row
+    and ``(bn, d)`` column point tiles it returns the ``(bm, bn)``
+    divergence tile (see ``core.divergence.Divergence.tile``).  ``None``
+    keeps the built-in squared-Euclidean tile — the default Gaussian path,
+    byte-for-byte the pre-Bregman kernel.
     """
     x = rows_ref[...].astype(jnp.float32)          # (bm, d)
     xc = cols_ref[...].astype(jnp.float32)         # (bn, d)
-    xx = jnp.sum(x * x, axis=-1)
-    cc = jnp.sum(xc * xc, axis=-1)
-    d2 = xx[:, None] + cc[None, :] - 2.0 * jnp.dot(
-        x, xc.T, preferred_element_type=jnp.float32)
+    if tile_fn is None:
+        xx = jnp.sum(x * x, axis=-1)
+        cc = jnp.sum(xc * xc, axis=-1)
+        d2 = xx[:, None] + cc[None, :] - 2.0 * jnp.dot(
+            x, xc.T, preferred_element_type=jnp.float32)
+    else:
+        d2 = tile_fn(x, xc)
     logits = -jnp.maximum(d2, 0.0) * inv_two_sigma_sq
 
     row_ids = i * block_m + jax.lax.broadcasted_iota(jnp.int32,
@@ -69,7 +101,7 @@ def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
 
 def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
             *, inv_two_sigma_sq: float, n_valid: int, block_m: int,
-            block_n: int):
+            block_n: int, tile_fn=None):
     i = pl.program_id(0)
     j = pl.program_id(1)
     ncols = pl.num_programs(1)
@@ -82,7 +114,8 @@ def _kernel(rows_ref, cols_ref, y_ref, o_ref, m_ref, s_ref, acc_ref,
 
     stream_tile_update(rows_ref, cols_ref, y_ref[...], m_ref, s_ref, acc_ref,
                        i, j, inv_two_sigma_sq=inv_two_sigma_sq,
-                       n_valid=n_valid, block_m=block_m, block_n=block_n)
+                       n_valid=n_valid, block_m=block_m, block_n=block_n,
+                       tile_fn=tile_fn)
 
     @pl.when(j == ncols - 1)
     def _finish():
@@ -99,20 +132,30 @@ def fused_lp_matvec_kernel(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    divergence=None,
 ) -> jax.Array:
-    """P @ Y without materializing P.  O(N^2 d) FLOPs, O(N*block) memory."""
+    """P @ Y without materializing P.  O(N^2 d) FLOPs, O(N*block) memory.
+
+    ``divergence`` swaps the tile similarity from ``||a-b||^2`` to any
+    registered Bregman divergence; point padding uses the divergence's
+    in-domain pad value (masked out of every accumulation by the column
+    mask) so KL/IS tiles stay finite on the padded rows/cols.
+    """
+    tile_fn, pad, transform = tile_config(divergence)
+    if transform is not None:
+        x = transform(x)
     n, d = x.shape
     c = y.shape[1]
     mp = -(-n // block_m) * block_m
     np_ = -(-n // block_n) * block_n
-    xp_rows = jnp.pad(x, ((0, mp - n), (0, 0)))
-    xp_cols = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    xp_rows = jnp.pad(x, ((0, mp - n), (0, 0)), constant_values=pad)
+    xp_cols = jnp.pad(x, ((0, np_ - n), (0, 0)), constant_values=pad)
     yp = jnp.pad(y, ((0, np_ - n), (0, 0)))
 
     kern = functools.partial(
         _kernel,
         inv_two_sigma_sq=float(1.0 / (2.0 * sigma * sigma)),
-        n_valid=n, block_m=block_m, block_n=block_n,
+        n_valid=n, block_m=block_m, block_n=block_n, tile_fn=tile_fn,
     )
     out = pl.pallas_call(
         kern,

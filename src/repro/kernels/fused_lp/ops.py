@@ -7,7 +7,7 @@ Batched dispatch
 ----------------
 ``fused_lp_step_batched`` / ``fused_lp_matvec_batched`` default to the
 **distance-reusing** layout (``reuse=True``): the batch folds into the
-channel axis so each pairwise-distance tile and its online-softmax
+channel axis so each pairwise-divergence tile and its online-softmax
 normalizer is computed once for all ``B`` right-hand sides (see
 ``batched.py``).  ``reuse=False`` selects the legacy per-batch-recompute
 grid ``(B, M, N)`` — kept so the bench gate can measure the reuse win and
@@ -21,6 +21,16 @@ static float ``alpha`` into the kernel as before.
 ``n_iters`` LP recursion in one jitted ``lax.scan`` with ``Y`` resident on
 device in the folded layout — the multi-iteration form the exact serving
 backend (``core.label_prop.lp_scan_fused``) dispatches to.
+
+Divergences
+-----------
+Every wrapper takes ``divergence=`` (``None`` | registry name |
+``core.divergence.Divergence``) as a *static* jit argument: the kernel's
+similarity tile is traced from the divergence's ``tile`` function, so each
+divergence compiles its own executable and mixed-divergence traffic can
+never share (or cross-contaminate) a compiled kernel.  ``None`` /
+``"sqeuclidean"`` keeps the built-in squared-Euclidean tile — bit-identical
+to the pre-Bregman kernels.
 """
 import functools
 
@@ -44,91 +54,150 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _static_div(divergence):
+    """Normalize to the hashable ``Divergence`` BEFORE the jit boundary.
+
+    A ``BoundDivergence`` carries device stats arrays and cannot be hashed
+    as a static jit argument; unwrapping here means every public wrapper
+    accepts ``None`` | name | ``Divergence`` | ``BoundDivergence`` uniformly
+    (matching ``core.label_prop.lp_scan_fused``) instead of failing with an
+    opaque unhashable-static-arg error for non-default divergences.
+    """
+    from repro.core.divergence import resolve_divergence
+
+    return resolve_divergence(divergence)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "block_m", "block_n"))
-def fused_lp_matvec(x, y, sigma: float, block_m: int = 256,
-                    block_n: int = 256):
+                   static_argnames=("sigma", "block_m", "block_n",
+                                    "divergence"))
+def _matvec_impl(x, y, sigma: float, block_m: int, block_n: int, divergence):
     return fused_lp_matvec_kernel(
         x, y, sigma, block_m=block_m, block_n=block_n,
-        interpret=_interpret())
+        interpret=_interpret(), divergence=divergence)
+
+
+def fused_lp_matvec(x, y, sigma: float, block_m: int = 256,
+                    block_n: int = 256, divergence=None):
+    return _matvec_impl(x, y, sigma, block_m=block_m, block_n=block_n,
+                        divergence=_static_div(divergence))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "block_m", "block_n"))
+                   static_argnames=("sigma", "block_m", "block_n",
+                                    "divergence"))
+def _step_folded_impl(x, y, y0, sigma: float, alpha,
+                      block_m: int, block_n: int, divergence):
+    return fused_lp_step_folded_kernel(
+        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
+        interpret=_interpret(), divergence=divergence)
+
+
 def fused_lp_step_folded(x, y, y0, sigma: float, alpha=1.0,
-                         block_m: int = 256, block_n: int = 256):
-    """One eq.-15 step in the folded (N, K) layout, distances computed once.
+                         block_m: int = 256, block_n: int = 256,
+                         divergence=None):
+    """One eq.-15 step in the folded (N, K) layout, divergences computed once.
 
     ``alpha`` is traced: a scalar or a per-column ``(K,)`` array.
     """
-    return fused_lp_step_folded_kernel(
-        x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
-        interpret=_interpret())
+    return _step_folded_impl(x, y, y0, sigma, alpha,
+                             block_m=block_m, block_n=block_n,
+                             divergence=_static_div(divergence))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "block_m", "block_n"))
+                   static_argnames=("sigma", "block_m", "block_n",
+                                    "divergence"))
 def _step_batched_reuse(x, y, y0, sigma: float, alpha,
-                        block_m: int = 256, block_n: int = 256):
+                        block_m: int = 256, block_n: int = 256,
+                        divergence=None):
     return fused_lp_step_batched_reuse_kernel(
         x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
-        interpret=_interpret())
+        interpret=_interpret(), divergence=divergence)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "alpha", "block_m", "block_n"))
+                   static_argnames=("sigma", "alpha", "block_m", "block_n",
+                                    "divergence"))
 def _step_batched_perbatch(x, y, y0, sigma: float, alpha: float,
-                           block_m: int = 256, block_n: int = 256):
+                           block_m: int = 256, block_n: int = 256,
+                           divergence=None):
     return fused_lp_step_batched_kernel(
         x, y, y0, sigma, alpha, block_m=block_m, block_n=block_n,
-        interpret=_interpret())
+        interpret=_interpret(), divergence=divergence)
 
 
 def fused_lp_step_batched(x, y, y0, sigma: float, alpha=0.01,
                           block_m: int = 256, block_n: int = 256,
-                          reuse: bool = True):
+                          reuse: bool = True, divergence=None):
     """One fused eq.-15 LP update for a (B, N, C) stack of label matrices.
 
-    ``reuse=True`` (default) computes each distance tile once for the whole
+    ``reuse=True`` (default) computes each divergence tile once for the whole
     batch and accepts a traced scalar or per-request ``(B,)`` ``alpha``;
     ``reuse=False`` is the legacy per-batch-recompute kernel, which requires
     a static float ``alpha``.
     """
+    divergence = _static_div(divergence)
     if reuse:
         return _step_batched_reuse(x, y, y0, sigma, alpha,
-                                   block_m=block_m, block_n=block_n)
+                                   block_m=block_m, block_n=block_n,
+                                   divergence=divergence)
     return _step_batched_perbatch(x, y, y0, sigma, float(alpha),
-                                  block_m=block_m, block_n=block_n)
+                                  block_m=block_m, block_n=block_n,
+                                  divergence=divergence)
 
 
 def fused_lp_matvec_batched(x, ys, sigma: float, block_m: int = 256,
-                            block_n: int = 256, reuse: bool = True):
+                            block_n: int = 256, reuse: bool = True,
+                            divergence=None):
     """P @ Y[b] for a (B, N, C) stack; alpha=1 degenerates the LP step."""
+    divergence = _static_div(divergence)
     if reuse:
         return _step_batched_reuse(x, ys, ys, sigma, 1.0,
-                                   block_m=block_m, block_n=block_n)
+                                   block_m=block_m, block_n=block_n,
+                                   divergence=divergence)
     return _step_batched_perbatch(x, ys, ys, sigma, 1.0,
-                                  block_m=block_m, block_n=block_n)
+                                  block_m=block_m, block_n=block_n,
+                                  divergence=divergence)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "n_iters", "block_m", "block_n"))
-def fused_lp_scan_folded(x, y0, sigma: float, alpha, n_iters: int,
-                         block_m: int = 256, block_n: int = 256):
-    """``n_iters`` fused eq.-15 steps, Y resident on device in folded layout."""
+                   static_argnames=("sigma", "n_iters", "block_m", "block_n",
+                                    "divergence"))
+def _scan_folded_impl(x, y0, sigma: float, alpha, n_iters: int,
+                      block_m: int, block_n: int, divergence):
     return fused_lp_scan_folded_kernel(
         x, y0, sigma, alpha, int(n_iters), block_m=block_m, block_n=block_n,
-        interpret=_interpret())
+        interpret=_interpret(), divergence=divergence)
+
+
+def fused_lp_scan_folded(x, y0, sigma: float, alpha, n_iters: int,
+                         block_m: int = 256, block_n: int = 256,
+                         divergence=None):
+    """``n_iters`` fused eq.-15 steps, Y resident on device in folded layout."""
+    return _scan_folded_impl(x, y0, sigma, alpha, int(n_iters),
+                             block_m=block_m, block_n=block_n,
+                             divergence=_static_div(divergence))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sigma", "n_iters", "block_m", "block_n"))
+                   static_argnames=("sigma", "n_iters", "block_m", "block_n",
+                                    "divergence"))
+def _scan_batched_impl(x, y0s, sigma: float, alpha, n_iters: int,
+                       block_m: int, block_n: int, divergence):
+    return fused_lp_scan_batched_reuse_kernel(
+        x, y0s, sigma, alpha, int(n_iters),
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+        divergence=divergence)
+
+
 def fused_lp_scan_batched(x, y0s, sigma: float, alpha, n_iters: int,
-                          block_m: int = 256, block_n: int = 256):
+                          block_m: int = 256, block_n: int = 256,
+                          divergence=None):
     """Whole batched LP run over a (B, N, C) stack: fold once, scan, unfold.
 
     ``alpha`` is a traced scalar or per-request ``(B,)`` array.
     """
-    return fused_lp_scan_batched_reuse_kernel(
-        x, y0s, sigma, alpha, int(n_iters),
-        block_m=block_m, block_n=block_n, interpret=_interpret())
+    return _scan_batched_impl(x, y0s, sigma, alpha, int(n_iters),
+                              block_m=block_m, block_n=block_n,
+                              divergence=_static_div(divergence))

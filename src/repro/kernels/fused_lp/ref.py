@@ -1,41 +1,71 @@
 """Pure-jnp oracles for the fused LP kernels: re-exports the blocked streaming
-reference from core.baselines plus direct dense forms (single and batched)."""
+reference from core.baselines plus direct dense forms (single and batched).
+
+Every dense form takes ``divergence=`` mirroring the kernels: ``None`` (or
+``"sqeuclidean"``) is the paper's Gaussian eq. 3, any other registry name
+swaps the pairwise similarity for that Bregman divergence — the oracle the
+divergence parity grid in ``tests/test_kernels.py`` pins both kernel layouts
+against.
+"""
+import jax
 import jax.numpy as jnp
 
 from repro.core.baselines import exact_transition_matrix, streaming_exact_matvec
+from repro.core.divergence import resolve_divergence
 
 __all__ = ["fused_lp_matvec_ref", "fused_lp_matvec_dense_ref",
            "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref",
-           "fused_lp_scan_batched_ref"]
+           "fused_lp_scan_batched_ref", "dense_transition_ref"]
+
+
+def dense_transition_ref(x, sigma, divergence=None):
+    """Dense row-stochastic transition matrix for any registered divergence.
+
+    Row softmax of ``-d(x_i, x_j) / (2 sigma^2)`` with a zero diagonal —
+    eq. 3 generalized from the Gaussian kernel to Bregman divergences.
+    O(N^2) memory: oracle for tests/benchmarks only.
+    """
+    div = resolve_divergence(divergence)
+    if div.name == "sqeuclidean":
+        # delegate to the pre-existing Gaussian oracle (identical formula)
+        return exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    sigma = jnp.asarray(sigma, jnp.float32)
+    logits = -div.pairwise(x, x) / (2.0 * sigma * sigma)
+    logits = jnp.where(jnp.eye(n, dtype=bool), -jnp.inf, logits)
+    return jax.nn.softmax(logits, axis=-1)
 
 
 def fused_lp_matvec_ref(x, y, sigma):
     return streaming_exact_matvec(x, y, jnp.asarray(sigma, jnp.float32))
 
 
-def fused_lp_matvec_dense_ref(x, y, sigma):
-    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+def fused_lp_matvec_dense_ref(x, y, sigma, divergence=None):
+    p = dense_transition_ref(x, sigma, divergence=divergence)
     return p @ y
 
 
-def fused_lp_matvec_batched_ref(x, ys, sigma):
+def fused_lp_matvec_batched_ref(x, ys, sigma, divergence=None):
     """Dense P applied to every RHS of a (B, N, C) stack."""
-    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    p = dense_transition_ref(x, sigma, divergence=divergence)
     return jnp.einsum("ij,bjc->bic", p, ys)
 
 
-def fused_lp_step_batched_ref(x, ys, y0s, sigma, alpha):
+def fused_lp_step_batched_ref(x, ys, y0s, sigma, alpha, divergence=None):
     """alpha * P @ Y[b] + (1 - alpha) * Y0[b] via the dense P (eq. 15)."""
-    return alpha * fused_lp_matvec_batched_ref(x, ys, sigma) + (1.0 - alpha) * y0s
+    return (alpha * fused_lp_matvec_batched_ref(x, ys, sigma,
+                                                divergence=divergence)
+            + (1.0 - alpha) * y0s)
 
 
-def fused_lp_scan_batched_ref(x, y0s, sigma, alpha, n_iters):
+def fused_lp_scan_batched_ref(x, y0s, sigma, alpha, n_iters, divergence=None):
     """``n_iters`` dense eq.-15 iterations over a (B, N, C) stack.
 
     ``alpha`` may be a scalar or a per-request ``(B,)`` array (broadcast over
     rows and channels) — the oracle for the multi-iteration reuse kernel.
     """
-    p = exact_transition_matrix(x, jnp.asarray(sigma, jnp.float32))
+    p = dense_transition_ref(x, sigma, divergence=divergence)
     alpha = jnp.asarray(alpha, jnp.float32)
     if alpha.ndim == 1:
         alpha = alpha[:, None, None]

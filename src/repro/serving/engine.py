@@ -51,7 +51,11 @@ where O(N^2 d) per iteration is acceptable.
 Compile-cache bound
 -------------------
 Jitted executables are keyed by ``(n_iters, N, batch bucket * width
-bucket)``.  Width buckets come from the shared ``buckets`` tuple and batch
+bucket)`` — plus, for the exact backend, the fitted *divergence* (a static
+jit argument of the fused kernels), so engines serving different Bregman
+divergences compile disjoint executables and can never cross-contaminate
+each other's cache.  Each engine's ``metrics().dispatch_key`` reports its
+``backend:divergence`` identity.  Width buckets come from the shared ``buckets`` tuple and batch
 buckets are powers of two up to ``max_batch``, so steady-state traffic
 touches at most ``len(buckets) * log2(max_batch)`` executables per
 ``n_iters`` — whatever widths, alphas, and arrival orders users produce.
@@ -142,6 +146,13 @@ class PropagateEngine:
                 f"backend must be 'vdt' or 'exact', got {backend!r}")
         self.vdt = vdt
         self.backend = backend
+        # divergence rides in the dispatch key: engines over different
+        # fitted divergences never share a compiled executable (the exact
+        # backend keys its kernels statically on the divergence; the VDT
+        # backend's q encodes it as data), and the metrics snapshot exposes
+        # the key so operators can tell mixed-divergence deployments apart
+        self.divergence = vdt.divergence_name
+        self.dispatch_key = f"{backend}:{self.divergence}"
         self.n = int(vdt.tree.n_points)
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
@@ -356,7 +367,8 @@ class PropagateEngine:
         with self._state_lock:
             in_flight = self._in_flight
         return self._metrics.snapshot(
-            queue_depth=len(self._queue), in_flight=in_flight)
+            queue_depth=len(self._queue), in_flight=in_flight,
+            dispatch_key=self.dispatch_key)
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; serve (``wait=True``) or cancel the backlog.

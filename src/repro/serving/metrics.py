@@ -41,6 +41,11 @@ class MetricsSnapshot:
     other counter.
     """
 
+    dispatch_key: str = ""  # engine identity: "backend:divergence" — two
+    #   engines sharing a process but differing in backend or fitted
+    #   divergence report different keys, mirroring the fact that their
+    #   dispatches can never share (or cross-contaminate) a compiled
+    #   executable
     submitted: int = 0  # accepted into the queue (excludes rejected)
     rejected: int = 0  # refused at submit: queue at capacity (backpressure)
     cancelled: int = 0  # future.cancel() won before the dispatch started
@@ -91,12 +96,14 @@ class EngineMetrics:
         with self._lock:
             self._latencies_ms.append(seconds * 1e3)
 
-    def snapshot(self, queue_depth: int = 0, in_flight: int = 0) -> MetricsSnapshot:
+    def snapshot(self, queue_depth: int = 0, in_flight: int = 0,
+                 dispatch_key: str = "") -> MetricsSnapshot:
         with self._lock:
             lat = sorted(self._latencies_ms)
             counts = dict(self._counts)
         mean = sum(lat) / len(lat) if lat else float("nan")
         return MetricsSnapshot(
+            dispatch_key=dispatch_key,
             queue_depth=queue_depth,
             in_flight=in_flight,
             latency_p50_ms=_quantile(lat, 0.50),

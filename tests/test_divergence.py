@@ -1,0 +1,366 @@
+"""Property-based harness for the Bregman divergence registry.
+
+Three layers of guarantees:
+
+1. **Bregman axioms** (via the ``tests/_hyp`` shim — real hypothesis when
+   installed, the deterministic fallback sampler otherwise) for every
+   registered divergence: non-negativity, identity of indiscernibles, and
+   convexity in the first argument.
+2. **Block factorization** — the O(1)-per-block subtree-statistics form
+   equals the brute-force pairwise double sum on real nodes.
+3. **sqeuclidean bit-parity** — the default divergence path reproduces the
+   pre-Bregman implementation bit-for-bit on the committed golden fixture
+   (``tests/golden_sqeuclidean.npz``, generated from the pre-PR code on the
+   ``small_fitted_vdt`` seed data).
+
+Plus the domain-mismatch contract: KL/Itakura-Saito over non-positive data
+raise a clear ``ValueError`` (message pinned) instead of emitting NaNs.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.divergence import (DIVERGENCES, bind_divergence,
+                                   get_divergence, mahalanobis,
+                                   resolve_divergence)
+from repro.core.qopt import block_sq_dists, lower_bound, optimize_q
+from repro.core.tree import build_tree, leaf_range
+from repro.core.vdt import VariationalDualTree
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_sqeuclidean.npz"
+
+# every registered divergence plus a non-trivially-scaled Mahalanobis —
+# the axioms and factorization must hold for all of them
+ALL_DIVS = sorted(DIVERGENCES) + ["mahalanobis-scaled"]
+
+
+def _div(name: str, d: int):
+    if name == "mahalanobis-scaled":
+        return mahalanobis(np.linspace(0.5, 2.0, d))
+    return get_divergence(name)
+
+
+def _points(rng, n: int, d: int) -> np.ndarray:
+    """Points inside every registered divergence's domain (positive orthant)."""
+    return (rng.rand(n, d).astype(np.float32) + 0.1) * 2.0
+
+
+# ------------------------------------------------------------ Bregman axioms
+@pytest.mark.parametrize("name", ALL_DIVS)
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_non_negativity(name, seed):
+    rng = np.random.RandomState(seed)
+    d = 4
+    div = _div(name, d)
+    a = jnp.asarray(_points(rng, 7, d))
+    b = jnp.asarray(_points(rng, 5, d))
+    pw = np.asarray(div.pairwise(a, b))
+    assert np.isfinite(pw).all()
+    assert (pw >= 0.0).all()
+
+
+@pytest.mark.parametrize("name", ALL_DIVS)
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_identity_of_indiscernibles(name, seed):
+    rng = np.random.RandomState(seed)
+    d = 3
+    div = _div(name, d)
+    x = jnp.asarray(_points(rng, 6, d))
+    pw = np.asarray(div.pairwise(x, x))
+    # d(a, a) == 0 ...
+    np.testing.assert_allclose(np.diagonal(pw), 0.0, atol=5e-5)
+    # ... and d(a, b) > 0 for the distinct random points off the diagonal
+    off = pw[~np.eye(pw.shape[0], dtype=bool)]
+    assert (off > 1e-7).all()
+
+
+@pytest.mark.parametrize("name", ALL_DIVS)
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    lam=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_convexity_in_first_argument(name, seed, lam):
+    """d(lam*a1 + (1-lam)*a2, b) <= lam*d(a1, b) + (1-lam)*d(a2, b)."""
+    rng = np.random.RandomState(seed)
+    d = 4
+    div = _div(name, d)
+    a1 = jnp.asarray(_points(rng, 1, d))
+    a2 = jnp.asarray(_points(rng, 1, d))
+    b = jnp.asarray(_points(rng, 8, d))
+    mix = lam * a1 + (1.0 - lam) * a2
+    lhs = np.asarray(div.pairwise(mix, b))[0]
+    rhs = (lam * np.asarray(div.pairwise(a1, b))
+           + (1.0 - lam) * np.asarray(div.pairwise(a2, b)))[0]
+    assert (lhs <= rhs + 1e-4 * (1.0 + np.abs(rhs))).all()
+
+
+@pytest.mark.parametrize("name", ALL_DIVS)
+def test_generator_consistency(name, rng):
+    """pairwise == phi(a) - phi(b) - <grad phi(b), a - b> (the definition)."""
+    d = 5
+    div = _div(name, d)
+    a = jnp.asarray(_points(rng, 6, d))
+    b = jnp.asarray(_points(rng, 4, d))
+    got = np.asarray(div.pairwise(a, b))
+    phi_a = np.asarray(div.phi(a))
+    phi_b = np.asarray(div.phi(b))
+    gb = np.asarray(div.grad_phi(b))
+    want = (phi_a[:, None] - phi_b[None, :]
+            - np.einsum("nd,md->mn", gb, np.asarray(a))
+            + np.einsum("nd,nd->n", gb, np.asarray(b))[None, :])
+    np.testing.assert_allclose(got, np.maximum(want, 0.0), rtol=2e-4, atol=2e-5)
+
+
+# ----------------------------------------------------- block factorization
+@pytest.mark.parametrize("name", ALL_DIVS)
+def test_block_div_matches_brute_force(name, rng):
+    """The O(1) subtree-statistics factorization == the pairwise double sum."""
+    d = 4
+    x = _points(rng, 21, d)  # non-power-of-two: ghosts must stay invisible
+    tree = build_tree(x)
+    div = _div(name, d)
+    bd = bind_divergence(div, tree)
+
+    w = np.asarray(tree.w_leaf)
+    xl = np.asarray(tree.x_leaf)
+    real = w > 0
+    ids_a = [0, 1, 3, 5, 8, 17, 33]
+    ids_b = [2, 4, 6, 7, 9, 18, 34]
+    got = np.asarray(bd.block_div(tree, jnp.asarray(ids_a), jnp.asarray(ids_b)))
+    for k, (ai, bi) in enumerate(zip(ids_a, ids_b)):
+        alo, ahi = leaf_range(ai, tree.L)
+        blo, bhi = leaf_range(bi, tree.L)
+        ia = np.arange(alo, ahi)[real[alo:ahi]]
+        ib = np.arange(blo, bhi)[real[blo:bhi]]
+        pw = np.asarray(div.pairwise(jnp.asarray(xl[ia]), jnp.asarray(xl[ib])))
+        want = (w[ia][:, None] * w[None, ib] * pw).sum()
+        np.testing.assert_allclose(got[k], want, rtol=2e-4, atol=1e-4)
+
+
+def test_identity_mahalanobis_matches_sqeuclidean(rng):
+    """scale == 1 Mahalanobis runs the *generic* Bregman-stats path, so its
+    agreement with the special-cased sqeuclidean formula cross-checks both."""
+    x = _points(rng, 19, 3)
+    tree = build_tree(x)
+    a = jnp.asarray([0, 1, 5, 9])
+    b = jnp.asarray([2, 4, 6, 10])
+    d_sq = np.asarray(block_sq_dists(tree, a, b))
+    d_mh = np.asarray(block_sq_dists(tree, a, b, divergence="mahalanobis"))
+    np.testing.assert_allclose(d_mh, d_sq, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["kl", "itakura_saito", "mahalanobis-scaled"])
+def test_fit_and_row_stochastic(name, rng):
+    """End-to-end fit under each non-default divergence: Q stays a proper
+    row-stochastic transition matrix (eq. 16 is divergence-independent)."""
+    d = 4
+    x = _points(rng, 23, d)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 23, divergence=_div(name, d))
+    dense = vdt.dense_q()
+    np.testing.assert_allclose(dense.sum(1), np.ones(23), rtol=5e-5)
+    assert np.isfinite(float(vdt.bound))
+    assert vdt.divergence_name == _div(name, d).name
+
+
+def test_singleton_blocks_equal_pairwise_softmax(rng):
+    """Fully-refined KL blocks: q equals the exact Bregman softmax (the
+    generalization of the paper's fully-refined-limit exactness)."""
+    from repro.core.blocks import BlockPartition, densify_q
+    from repro.kernels.fused_lp.ref import dense_transition_ref
+
+    n, d = 12, 3
+    x = _points(np.random.RandomState(5), n, d)
+    tree = build_tree(x)
+    w = np.asarray(tree.w_leaf)
+    real = np.where(w > 0)[0]
+    first_leaf = tree.n_internal
+    a, b = [], []
+    for s in real:
+        for t in real:
+            if s != t:
+                a.append(first_leaf + s)
+                b.append(first_leaf + t)
+    m = len(a)
+    bp = BlockPartition(a=np.asarray(a, np.int32), b=np.asarray(b, np.int32),
+                        mirror=np.full(m, -1, np.int32),
+                        active=np.ones(m, bool), n=m, cap=m)
+    sigma = jnp.asarray(0.7)
+    qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),
+                    jnp.asarray(bp.active), sigma, divergence="kl")
+    q = np.where(np.isfinite(np.asarray(qs.log_q)), np.exp(np.asarray(qs.log_q)), 0.0)
+    dense = densify_q(bp, tree, q)
+    p = np.asarray(dense_transition_ref(jnp.asarray(x), sigma, divergence="kl"))
+    np.testing.assert_allclose(dense, p, rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------- sqeuclidean bit-parity
+def test_sqeuclidean_block_dists_bit_parity_with_golden(rng):
+    """block_sq_dists (default AND named sqeuclidean) is bit-identical to the
+    pre-Bregman implementation's output on the committed golden fixture."""
+    g = np.load(GOLDEN)
+    tree = build_tree(g["x"])
+    a, b = jnp.asarray(g["a"]), jnp.asarray(g["b"])
+    np.testing.assert_array_equal(np.asarray(block_sq_dists(tree, a, b)),
+                                  g["block_d2"])
+    np.testing.assert_array_equal(
+        np.asarray(block_sq_dists(tree, a, b, divergence="sqeuclidean")),
+        g["block_d2"])
+
+
+def test_sqeuclidean_fit_bit_parity_with_golden():
+    """The full default fit — q-state, bound, sigma, dense Q — reproduces the
+    pre-PR outputs bit-for-bit (the acceptance pin for the generalization)."""
+    g = np.load(GOLDEN)
+    vdt = VariationalDualTree.fit(g["x"], max_blocks=4 * g["x"].shape[0])
+    np.testing.assert_array_equal(np.asarray(vdt.qstate.log_q), g["log_q"])
+    np.testing.assert_array_equal(np.asarray(vdt.qstate.log_v), g["log_v"])
+    np.testing.assert_array_equal(np.asarray(vdt.qstate.log_z), g["log_z"])
+    np.testing.assert_array_equal(np.asarray(vdt.qstate.log_zt), g["log_zt"])
+    np.testing.assert_array_equal(np.asarray(vdt.qstate.bound), g["bound"])
+    np.testing.assert_array_equal(np.asarray(vdt.sigma), g["sigma"])
+    np.testing.assert_array_equal(vdt.dense_q(), g["dense_q"])
+    # and the explicit name spells the same path
+    vdt2 = VariationalDualTree.fit(g["x"], max_blocks=4 * g["x"].shape[0],
+                                   divergence="sqeuclidean")
+    np.testing.assert_array_equal(np.asarray(vdt2.qstate.log_q), g["log_q"])
+    np.testing.assert_array_equal(np.asarray(vdt2.qstate.bound), g["bound"])
+
+
+# -------------------------------------------------- domain mismatch errors
+def test_fit_kl_on_nonpositive_data_raises(rng):
+    x = rng.randn(16, 3).astype(np.float32)  # has negative coordinates
+    with pytest.raises(ValueError, match="requires strictly positive inputs"):
+        VariationalDualTree.fit(x, divergence="kl")
+
+
+def test_lower_bound_divergence_domain_mismatch_raises(rng):
+    """qopt.lower_bound with a positive-domain divergence over a tree fitted
+    on signed data must raise, not return NaN."""
+    x = rng.randn(16, 3).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 16)  # default fit is fine
+    a, b = jnp.asarray(vdt.bp.a), jnp.asarray(vdt.bp.b)
+    act = jnp.asarray(vdt.bp.active)
+    with pytest.raises(ValueError, match="requires strictly positive inputs"):
+        lower_bound(vdt.tree, a, b, act, vdt.qstate.log_q, vdt.sigma,
+                    divergence="itakura_saito")
+
+
+def test_dense_q_rejects_nonfinite_state(rng):
+    """A hand-corrupted q-state (the NaN signature of a divergence/domain
+    mismatch) surfaces as a clear ValueError from dense_q, never NaN output."""
+    x = _points(rng, 16, 3)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 16, divergence="kl")
+    vdt.qstate = vdt.qstate._replace(bound=jnp.asarray(float("nan")))
+    with pytest.raises(ValueError, match="divergence/domain mismatch"):
+        vdt.dense_q()
+    with pytest.raises(ValueError, match="divergence/domain mismatch"):
+        vdt.lower_bound()
+
+
+def test_mahalanobis_equal_scales_share_identity():
+    """Two factory calls with the same scale must compare/hash equal — the
+    static jit key dedups on the digest-embedding name, so per-request
+    factory construction can never grow the kernel compile cache."""
+    a = mahalanobis([0.5, 2.0, 1.5])
+    b = mahalanobis([0.5, 2.0, 1.5])
+    c = mahalanobis([0.5, 2.0, 1.6])
+    assert a == b and hash(a) == hash(b)
+    assert a != c and a.name != c.name
+    # names imply behavior: a length-k ones vector pins required_dim=k, so
+    # it must NOT collide with the dimension-free registered "mahalanobis"
+    ones3 = mahalanobis([1.0, 1.0, 1.0])
+    assert ones3.name != "mahalanobis" and ones3.required_dim == 3
+    assert mahalanobis([1.0]).name == "mahalanobis"
+
+
+def test_mahalanobis_dim_mismatch_raises(rng):
+    """A scale vector whose length disagrees with the data dimension fails
+    at fit time with a clear error, not an opaque jit broadcast error."""
+    x = _points(rng, 16, 4)
+    with pytest.raises(ValueError, match="3-dimensional points, got d=4"):
+        VariationalDualTree.fit(x, divergence=mahalanobis([1.0, 2.0, 3.0]))
+
+
+def test_mahalanobis_scalar_scale_log_partition_counts_dim():
+    """A length-1 scale broadcasts over all d coordinates, so its normalizer
+    term must count d times (the anisotropic-Gaussian normalizer)."""
+    import jax.numpy as jnp_
+
+    dim, sigma = 4, 1.3
+    gauss = 0.5 * dim * np.log(2.0 * np.pi * sigma * sigma)
+    got_scalar = float(mahalanobis([2.0]).log_partition(dim, jnp_.asarray(sigma)))
+    got_vector = float(mahalanobis([2.0] * dim).log_partition(dim, jnp_.asarray(sigma)))
+    want = gauss - 0.5 * dim * np.log(2.0)
+    np.testing.assert_allclose(got_scalar, want, rtol=1e-6)
+    np.testing.assert_allclose(got_vector, want, rtol=1e-6)
+
+
+def test_sigma_star_is_stationary_point_of_bound():
+    """Eq. 12 must maximize the (surrogate) bound in sigma for KL too —
+    fit_sigma_q stays coordinate ascent under every registered divergence."""
+    from repro.core.qopt import lower_bound as lb
+    from repro.core.sigma import sigma_star
+
+    x = _points(np.random.RandomState(2), 20, 3)
+    tree = build_tree(x)
+    from repro.core.blocks import coarsest_partition
+    bp = coarsest_partition(tree)
+    a, b = jnp.asarray(bp.a), jnp.asarray(bp.b)
+    act = jnp.asarray(bp.active)
+    qs = optimize_q(tree, a, b, act, jnp.asarray(0.5), divergence="kl")
+    s_star = sigma_star(tree, a, b, act, qs.log_q, divergence="kl")
+    base = float(lb(tree, a, b, act, qs.log_q, s_star, divergence="kl"))
+    for mult in (0.8, 1.25):
+        other = float(lb(tree, a, b, act, qs.log_q, s_star * mult,
+                         divergence="kl"))
+        assert other <= base + 1e-4 * abs(base), (mult, other, base)
+
+
+def test_bind_divergence_memoizes_per_tree(rng):
+    """Repeated public-API calls with an unbound divergence must reuse the
+    bound stats (one O(N d) pass per (divergence, tree), not per call),
+    and fit itself seeds the memo."""
+    x = _points(rng, 17, 3)
+    tree = build_tree(x)
+    b1 = bind_divergence("kl", tree)
+    b2 = bind_divergence("kl", tree)
+    assert b1 is b2
+    other = build_tree(_points(rng, 17, 3))
+    assert bind_divergence("kl", other) is not b1
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 17, divergence="kl")
+    assert bind_divergence("kl", vdt.tree) is vdt.bound_divergence
+
+
+def test_bound_divergence_rejects_wrong_tree(rng):
+    """Stats bound to one tree must not silently combine with another
+    equal-shaped tree's W/S1 — that would be finite but wrong."""
+    t1 = build_tree(_points(rng, 17, 3))
+    t2 = build_tree(_points(rng, 17, 3))  # same shape, different data
+    b1 = bind_divergence("kl", t1)
+    with pytest.raises(ValueError, match="bound to a different tree"):
+        b1.block_div(t2, jnp.asarray([0]), jnp.asarray([1]))
+
+
+def test_unknown_divergence_name_raises():
+    with pytest.raises(ValueError, match="unknown divergence"):
+        resolve_divergence("wasserstein")
+    with pytest.raises(TypeError):
+        resolve_divergence(1.5)
+    with pytest.raises(ValueError, match="strictly positive"):
+        mahalanobis([1.0, -2.0])
+
+
+def test_vdt_lower_bound_matches_qopt(rng):
+    """VariationalDualTree.lower_bound == optimize_q's internal bound, for a
+    non-default divergence too."""
+    x = _points(rng, 20, 3)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 20, divergence="kl")
+    direct = float(vdt.lower_bound())
+    assert np.isclose(direct, float(vdt.bound), rtol=1e-4), (direct, vdt.bound)

@@ -232,6 +232,76 @@ def test_alpha_canonicalization_regression(small_fitted_vdt, monkeypatch):
                                rtol=1e-6, atol=1e-7)
 
 
+# ------------------------------------------------------ divergence isolation
+@pytest.fixture(scope="module")
+def positive_data_vdts():
+    """Two models over the SAME strictly-positive data, different divergences."""
+    from repro.core.vdt import VariationalDualTree
+
+    r = np.random.RandomState(11)
+    x = (r.rand(33, 4).astype(np.float32) + 0.1)
+    vdt_sq = VariationalDualTree.fit(x, max_blocks=4 * 33)
+    vdt_kl = VariationalDualTree.fit(x, max_blocks=4 * 33, divergence="kl")
+    return x, vdt_sq, vdt_kl
+
+
+def test_engines_with_different_divergences_stay_isolated(positive_data_vdts):
+    """Two engines fitted with different divergences over the same data must
+    return different, per-divergence-correct LP answers and report separate
+    compile-cache dispatch keys in the metrics snapshot — mixed-divergence
+    deployments can never cross-contaminate the compile cache."""
+    from repro.kernels.fused_lp import fused_lp_scan_batched_ref
+
+    x, vdt_sq, vdt_kl = positive_data_vdts
+    assert vdt_sq.divergence_name == "sqeuclidean"
+    assert vdt_kl.divergence_name == "kl"
+
+    rng = np.random.RandomState(12)
+    y0 = (rng.rand(x.shape[0], 2) > 0.7).astype(np.float32)
+    reqs = [PropagateRequest(y0, alpha=0.2, n_iters=4),
+            PropagateRequest(y0 * 0.5, alpha=0.1, n_iters=4)]
+
+    # the exact backend keys its fused kernels statically on the divergence,
+    # so this exercises the actual compiled-executable isolation
+    eng_sq = PropagateEngine(vdt_sq, start=False, backend="exact")
+    eng_kl = PropagateEngine(vdt_kl, start=False, backend="exact")
+    futs_sq = [eng_sq.submit(q) for q in reqs]
+    futs_kl = [eng_kl.submit(q) for q in reqs]
+    eng_sq.flush()
+    eng_kl.flush()
+
+    for fut_sq, fut_kl, req in zip(futs_sq, futs_kl, reqs):
+        got_sq = np.asarray(fut_sq.result(timeout=0))
+        got_kl = np.asarray(fut_kl.result(timeout=0))
+        # per-divergence correctness against the dense eq.-15 oracle
+        want_sq = np.asarray(fused_lp_scan_batched_ref(
+            x, req.y0[None], float(vdt_sq.sigma), req.alpha, req.n_iters))[0]
+        want_kl = np.asarray(fused_lp_scan_batched_ref(
+            x, req.y0[None], float(vdt_kl.sigma), req.alpha, req.n_iters,
+            divergence="kl"))[0]
+        np.testing.assert_allclose(got_sq, want_sq, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got_kl, want_kl, rtol=1e-5, atol=1e-5)
+        # ... and the two divergences genuinely disagree on the same input
+        assert np.abs(got_sq - got_kl).max() > 1e-4
+
+    # separate compile-cache keys in the metrics snapshot
+    m_sq, m_kl = eng_sq.metrics(), eng_kl.metrics()
+    assert m_sq.dispatch_key == "exact:sqeuclidean"
+    assert m_kl.dispatch_key == "exact:kl"
+    assert m_sq.dispatch_key != m_kl.dispatch_key
+    assert m_sq.completed == m_kl.completed == len(reqs)
+
+
+def test_vdt_backend_engines_divergence_keys(positive_data_vdts):
+    """The default-backend engines expose the divergence in their dispatch
+    key too (their q already encodes it as data)."""
+    _, vdt_sq, vdt_kl = positive_data_vdts
+    eng_sq = PropagateEngine(vdt_sq, start=False)
+    eng_kl = PropagateEngine(vdt_kl, start=False)
+    assert eng_sq.metrics().dispatch_key == "vdt:sqeuclidean"
+    assert eng_kl.metrics().dispatch_key == "vdt:kl"
+
+
 # --------------------------------------------------------------------- soak
 @pytest.mark.slow
 def test_engine_soak_threaded(separated_clusters_vdt):

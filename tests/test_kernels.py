@@ -4,10 +4,13 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.core.divergence import mahalanobis
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.fused_lp import (fused_lp_matvec, fused_lp_matvec_dense_ref,
+                                    fused_lp_scan_batched,
                                     fused_lp_scan_batched_ref,
                                     fused_lp_scan_folded,
+                                    fused_lp_step_batched,
                                     fused_lp_step_batched_ref,
                                     fused_lp_step_folded)
 from repro.kernels.pairwise import pairwise_sq_dists, pairwise_sq_dists_ref
@@ -110,6 +113,80 @@ def test_fused_lp_scan_folded_matches_iterated_dense(rng, n_iters):
     want = fused_lp_scan_batched_ref(x, y0[None], 1.0, 0.1, n_iters)[0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------- divergence × B × C × odd-N grid
+def _divergence_param(name: str, d: int):
+    """Grid entries: registry names plus a non-trivially-scaled Mahalanobis."""
+    if name == "mahalanobis-scaled":
+        return mahalanobis(np.linspace(0.5, 2.0, d))
+    return name
+
+
+DIV_GRID = ["sqeuclidean", "kl", "itakura_saito", "mahalanobis-scaled"]
+
+
+@pytest.mark.parametrize("divergence", DIV_GRID)
+@pytest.mark.parametrize("b,c,n", [
+    (2, 2, 33), (3, 1, 41),
+    # big odd shapes are interpret-mode-slow on CPU -> slow tier
+    pytest.param(4, 3, 129, marks=pytest.mark.slow),
+    pytest.param(8, 2, 257, marks=pytest.mark.slow),
+])
+def test_divergence_kernel_parity_grid(rng, divergence, b, c, n):
+    """Folded-reuse kernel == legacy per-batch kernel == dense oracle, for
+    every divergence: one step and a short scan, odd N (padding must stay
+    invisible — for KL/IS the pad value is what keeps tiles finite)."""
+    d = 5
+    div = _divergence_param(divergence, d)
+    x = jnp.asarray(rng.rand(n, d) + 0.1, jnp.float32)  # in-domain for all
+    y = jnp.asarray(rng.rand(b, n, c), jnp.float32)
+    y0 = jnp.asarray(rng.rand(b, n, c), jnp.float32)
+    alpha = 0.1
+
+    want = np.asarray(fused_lp_step_batched_ref(x, y, y0, 1.0, alpha,
+                                                divergence=div))
+    got_reuse = np.asarray(fused_lp_step_batched(
+        x, y, y0, 1.0, alpha, block_m=16, block_n=16, reuse=True,
+        divergence=div))
+    got_legacy = np.asarray(fused_lp_step_batched(
+        x, y, y0, 1.0, alpha, block_m=16, block_n=16, reuse=False,
+        divergence=div))
+    np.testing.assert_allclose(got_reuse, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_legacy, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_reuse, got_legacy, rtol=1e-4, atol=1e-5)
+
+    got_scan = np.asarray(fused_lp_scan_batched(
+        x, y0, 1.0, alpha, 3, block_m=16, block_n=16, divergence=div))
+    want_scan = np.asarray(fused_lp_scan_batched_ref(x, y0, 1.0, alpha, 3,
+                                                     divergence=div))
+    np.testing.assert_allclose(got_scan, want_scan, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("divergence", ["kl", "itakura_saito"])
+def test_divergence_row_stochastic_action(rng, divergence):
+    """The generalized transition matrix is still row-stochastic through the
+    kernel: P @ 1 == 1 for Bregman similarities too."""
+    n = 53
+    x = jnp.asarray(rng.rand(n, 4) + 0.1, jnp.float32)
+    ones = jnp.ones((n, 1), jnp.float32)
+    got = np.asarray(fused_lp_matvec(x, ones, 1.0, block_m=16, block_n=16,
+                                     divergence=divergence))
+    np.testing.assert_allclose(got, 1.0, rtol=1e-5)
+
+
+def test_divergence_per_request_alpha_reuse(rng):
+    """Per-request (B,) alphas ride the folded KL kernel exactly."""
+    b, n, c = 3, 29, 2
+    x = jnp.asarray(rng.rand(n, 4) + 0.1, jnp.float32)
+    y0 = jnp.asarray(rng.rand(b, n, c), jnp.float32)
+    al = jnp.asarray([0.0, 0.2, 1.0], jnp.float32)
+    got = np.asarray(fused_lp_scan_batched(x, y0, 1.0, al, 2,
+                                           block_m=16, block_n=16,
+                                           divergence="kl"))
+    want = np.asarray(fused_lp_scan_batched_ref(x, y0, 1.0, al, 2,
+                                                divergence="kl"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
 # --------------------------------------------------------- flash attention

@@ -2,15 +2,30 @@
 
 Compares the machine-readable results the benchmarks wrote
 (``BENCH_<name>.json``, see ``benchmarks/common.write_json``) against the
-committed floors in ``benchmarks/baselines.json`` and exits non-zero when
-any figure falls below its floor — turning the benchmark smoke into an
-actual regression gate.
+committed bounds in ``benchmarks/baselines.json`` and exits non-zero when
+any figure breaches its bound — turning the benchmark smoke into an actual
+regression gate.
 
-Baselines map ``<bench>.<metric>`` to a floor; metrics are looked up in the
-bench's JSON top level (keys starting with ``_`` are annotations, skipped).
-Floors are deliberately conservative (well under what a quiet CI runner
+Baseline schema (version :data:`SCHEMA_VERSION`)
+------------------------------------------------
+``baselines.json`` carries a top-level ``schema_version`` plus one object
+per benchmark.  Metric names are **dotted paths** resolved into the
+bench's (possibly nested) JSON — e.g. ``serving.fifo.speedup`` is the
+``"speedup"`` key inside the ``"fifo"`` object of ``BENCH_serving.json`` —
+so per-policy / per-backend namespaces (``fifo.*``, ``edf.*``,
+``backends.kl.*``) gate independently.  Each bound is either a bare number
+(shorthand for ``{"min": x}``) or an object with ``min`` and/or ``max``:
+``min`` floors speedups/occupancies, ``max`` caps badness metrics like
+``edf.deadline_miss_rate``.
+
+Every result file must carry the matching ``schema_version`` (stamped by
+``benchmarks/common.write_json``): a stale ``BENCH_*.json`` produced by an
+older benchmark revision fails LOUDLY here instead of silently passing
+against bounds it never measured.
+
+Bounds are deliberately conservative (well clear of what a quiet CI runner
 measures in tiny mode) so OS noise doesn't flake the gate, while a real
-regression — e.g. the batched path degrading to the per-request loop —
+regression — e.g. the priority policy degrading to FIFO tail latency —
 still trips it.
 
     python -m benchmarks.check_gate [--dir DIR]
@@ -24,14 +39,36 @@ import sys
 
 BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
 
+# bumped whenever the BENCH_*.json layout or the baseline schema changes;
+# benchmarks/common.write_json stamps it into every result file
+SCHEMA_VERSION = 2
+
+
+def lookup(result: dict, dotted: str):
+    """Resolve a dotted metric path into a (possibly nested) result dict."""
+    node = result
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
 
 def check(results_dir: str) -> int:
     with open(BASELINES) as fh:
         baselines = json.load(fh)
+    expected_schema = baselines.get("schema_version")
+    if expected_schema != SCHEMA_VERSION:
+        print(
+            f"baselines.json schema_version {expected_schema!r} != "
+            f"checker schema {SCHEMA_VERSION} — update them together",
+            file=sys.stderr,
+        )
+        return 1
 
     failures, checked = [], 0
-    for bench, floors in baselines.items():
-        if bench.startswith("_"):
+    for bench, bounds in baselines.items():
+        if bench.startswith("_") or bench == "schema_version":
             continue  # annotation keys, not benchmarks
         path = os.path.join(results_dir, f"BENCH_{bench}.json")
         if not os.path.exists(path):
@@ -39,16 +76,32 @@ def check(results_dir: str) -> int:
             continue
         with open(path) as fh:
             result = json.load(fh)
-        for metric, floor in floors.items():
-            got = result.get(metric)
+        got_schema = result.get("schema_version")
+        if got_schema != expected_schema:
+            failures.append(
+                f"{bench}: schema_version {got_schema!r} != expected "
+                f"{expected_schema} — stale artifact from an older "
+                f"benchmark revision; re-run the benchmark"
+            )
+            continue
+        for metric, bound in bounds.items():
+            if not isinstance(bound, dict):
+                bound = {"min": bound}
+            got = lookup(result, metric)
             if got is None:
                 failures.append(f"{bench}.{metric}: not in {path}")
                 continue
             checked += 1
-            status = "OK " if got >= floor else "FAIL"
-            print(f"[{status}] {bench}.{metric}: {got:.3f} (floor {floor})")
-            if got < floor:
-                failures.append(f"{bench}.{metric}: {got:.3f} < floor {floor}")
+            problems = []
+            if "min" in bound and got < bound["min"]:
+                problems.append(f"{got:.3f} < min {bound['min']}")
+            if "max" in bound and got > bound["max"]:
+                problems.append(f"{got:.3f} > max {bound['max']}")
+            status = "FAIL" if problems else "OK "
+            spec = ", ".join(f"{k}={v}" for k, v in sorted(bound.items()))
+            print(f"[{status}] {bench}.{metric}: {got:.3f} ({spec})")
+            for problem in problems:
+                failures.append(f"{bench}.{metric}: {problem}")
 
     if failures:
         print("\nbench-gate FAILED:", file=sys.stderr)

@@ -15,7 +15,9 @@ from typing import Callable
 
 import jax
 
-__all__ = ["timeit", "emit", "json_path", "write_json"]
+from benchmarks.check_gate import SCHEMA_VERSION
+
+__all__ = ["timeit", "emit", "json_path", "write_json", "SCHEMA_VERSION"]
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -46,6 +48,9 @@ def write_json(name: str, payload: dict) -> str:
     path = json_path(name)
     payload = dict(payload)
     payload.setdefault("bench", name)
+    # schema stamp: check_gate refuses artifacts from older benchmark
+    # revisions instead of silently passing them against newer bounds
+    payload.setdefault("schema_version", SCHEMA_VERSION)
     payload.setdefault("tiny", bool(os.environ.get("BENCH_TINY")))
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

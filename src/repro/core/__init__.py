@@ -17,7 +17,12 @@ from repro.core.divergence import (
     register_divergence,
     resolve_divergence,
 )
-from repro.core.label_prop import ccr, label_propagate, one_hot_labels
+from repro.core.label_prop import (
+    ccr,
+    label_propagate,
+    one_hot_labels,
+    route_backend,
+)
 from repro.core.matvec import mpt_matvec
 from repro.core.qopt import QState, optimize_q
 from repro.core.refine import refine_to_budget, refinement_gains
@@ -49,6 +54,7 @@ __all__ = [
     "refinement_gains",
     "register_divergence",
     "resolve_divergence",
+    "route_backend",
     "sigma_init",
     "sigma_star",
     "streaming_exact_matvec",

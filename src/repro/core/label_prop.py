@@ -40,7 +40,38 @@ import numpy as np
 from repro.core.matvec import mpt_matvec_leaforder
 
 __all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
-           "lp_scan_fused", "ccr"]
+           "lp_scan_fused", "route_backend", "AUTO_EXACT_MAX_N", "ccr"]
+
+# `backend="auto"` routes to the exact eq.-3 scan at or below this many
+# points: one exact LP iteration is O(N^2 d) streamed, which at this scale
+# costs about the same as the VDT dispatch overhead, so small problems might
+# as well get the ground-truth walk.  Above it, auto traffic rides the
+# fitted O(|B|) approximation.
+AUTO_EXACT_MAX_N = 1024
+
+
+def route_backend(requested, default: str = "vdt", *, n=None,
+                  auto_exact_max_n: int = AUTO_EXACT_MAX_N) -> str:
+    """Resolve a per-request backend tag to a concrete scan implementation.
+
+    The single routing decision behind the engine's exact/VDT hybrid (and
+    ``propagate_many``): every request carries ``backend`` as ``None`` (use
+    the caller's ``default``), ``"vdt"`` / ``"exact"`` (explicit — e.g.
+    validation-tagged traffic pinned to the exact eq.-3 walk), or
+    ``"auto"`` (exact iff ``n <= auto_exact_max_n``, VDT otherwise).
+    Returns ``"vdt"`` or ``"exact"``; raises ``ValueError`` on anything
+    else so bad tags fail at submit time, not at dispatch.
+    """
+    if requested is None:
+        requested = default
+    if requested == "auto":
+        if n is None:
+            raise ValueError("backend='auto' routing needs the problem size n")
+        return "exact" if int(n) <= int(auto_exact_max_n) else "vdt"
+    if requested not in ("vdt", "exact"):
+        raise ValueError(
+            f"backend must be 'vdt', 'exact', 'auto' or None, got {requested!r}")
+    return requested
 
 
 def one_hot_labels(

@@ -28,13 +28,14 @@ from repro.models.whisper import encoder_forward
 # Label-propagation requests ride the same serving layer: propagate_many
 # pads/buckets variable-width label matrices into batched VDT dispatches,
 # and PropagateEngine serves a live queue of them with continuous batching.
-from repro.serving.engine import PropagateEngine, QueueFull
+from repro.serving.engine import DeadlineExceeded, PropagateEngine, QueueFull
 from repro.serving.metrics import MetricsSnapshot
 from repro.serving.propagate import PropagateRequest, propagate_many
 
 __all__ = ["DecodeState", "init_state", "prefill", "decode_step",
-           "DECODE_SLACK", "MetricsSnapshot", "PropagateEngine",
-           "PropagateRequest", "QueueFull", "propagate_many"]
+           "DECODE_SLACK", "DeadlineExceeded", "MetricsSnapshot",
+           "PropagateEngine", "PropagateRequest", "QueueFull",
+           "propagate_many"]
 
 # non-ring caches reserve this many slots beyond the prefilled context
 DECODE_SLACK = 16

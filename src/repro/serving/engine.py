@@ -6,23 +6,34 @@ static request list, it owns a live bounded queue and a scheduler that
 coalesces *whatever is waiting* into few batched device dispatches, while
 clients block on per-request futures.
 
-Scheduling policy
------------------
+Scheduling policy (scheduler v2)
+--------------------------------
 One scheduler iteration (``step`` when driven manually, the background
 thread's loop body otherwise):
 
-1. wait for the queue to go non-empty, then linger up to ``max_wait_ms``
-   for it to fill toward ``max_batch`` — the classic throughput/latency
-   batching window (0 disables the linger: dispatch whatever is there).
-   The linger is adaptive: it ends as soon as arrivals quiesce for ~1ms,
-   so a lone request never waits the full window and a resubmit burst
-   from N closed-loop clients is caught whole;
-2. atomically drain up to ``max_batch`` entries, dropping any whose future
-   was cancelled while queued;
-3. group the drained entries by ``n_iters`` (only requests sharing a scan
-   length can share a dispatch).  Alpha does NOT fragment groups — LP is
-   column-independent, so each request's alpha rides the dispatch as one
-   element of a *traced* per-request array (see
+1. wait for the queue to go non-empty, then linger for it to fill toward
+   ``max_batch`` — the classic throughput/latency batching window.  The
+   window is **rate-adaptive**: an EWMA of observed inter-arrival gaps
+   estimates how long ``max_batch`` arrivals take, and the linger waits
+   ``min(max_wait_ms, ewma_gap * missing_slots)`` (clamped to
+   ``[0, max_wait_ms]``; under ``policy="edf"`` additionally capped at the
+   earliest queued deadline, so batching can never itself expire the most
+   urgent request).  The linger also ends as soon as arrivals quiesce for
+   ~1ms, so a lone request never waits the full window.  All timing runs
+   on the injectable ``clock``, so tests drive it deterministically;
+2. atomically drain up to ``max_batch`` entries **in queue-discipline
+   order** (``policy``: FIFO, priority with starvation-bounded aging, or
+   earliest-deadline-first — see ``serving/queue.py``), dropping entries
+   whose future was cancelled while queued and fast-failing expired EDF
+   entries with :class:`DeadlineExceeded` before they cost a dispatch;
+3. group the drained entries by ``(n_iters, backend)`` — only requests
+   sharing a scan length and a transition matrix can share a dispatch.
+   ``backend`` is **per-request** (exact/VDT hybrid routing, resolved at
+   submit via :func:`repro.core.label_prop.route_backend`), so validation
+   or small-N traffic tagged ``backend="exact"`` rides the same engine as
+   bulk VDT traffic without fragmenting either side's batches.  Alpha does
+   NOT fragment groups — LP is column-independent, so each request's alpha
+   rides the dispatch as one element of a *traced* per-request array (see
    ``VariationalDualTree.label_propagate``).  Width does not fragment
    either by default (``coalesce_widths=True``): every request in the
    group is zero-padded to the group's largest width bucket, because one
@@ -33,35 +44,38 @@ thread's loop body otherwise):
    backends where compute scales hard with padded width;
 4. per group, zero-pad widths to the chosen bucket, pad the batch axis to
    the next power of two (with zero rows at alpha 0), run one batched
-   ``label_propagate``, slice each answer back to its true width, and
-   resolve the futures.
+   ``label_propagate`` on the group's backend, slice each answer back to
+   its true width, and resolve the futures (counting completions that
+   landed after their request's deadline as ``deadline_missed``).
 
 Backends
 --------
-Every dispatch runs against the engine's configured transition-matrix
-``backend``.  ``"vdt"`` (default) serves the fitted O(|B|) approximation —
-the production path.  ``"exact"`` serves the exact eq.-3 matrix through the
+``"vdt"`` (the default) serves the fitted O(|B|) approximation — the
+production path.  ``"exact"`` serves the exact eq.-3 matrix through the
 distance-reusing fused kernel (``core.label_prop.lp_scan_fused``): the
 coalesced group shares one streaming pass per LP iteration, so the
 pairwise-distance/softmax work — the reason exact LP was ever expensive to
 batch — is paid once per iteration for the whole group instead of once per
-request.  Use it for accuracy-validation or ground-truth traffic at sizes
-where O(N^2 d) per iteration is acceptable.
+request.  The engine-level ``backend`` is only the *default*: each
+``PropagateRequest(backend=...)`` may override it (``"exact"`` for
+accuracy-validation traffic, ``"auto"`` for route-by-size), making one
+engine an exact/VDT hybrid.
 
 Compile-cache bound
 -------------------
 Jitted executables are keyed by ``(n_iters, N, batch bucket * width
-bucket)`` — plus, for the exact backend, the fitted *divergence* (a static
-jit argument of the fused kernels), so engines serving different Bregman
-divergences compile disjoint executables and can never cross-contaminate
-each other's cache.  Each engine's ``metrics().dispatch_key`` reports its
-``backend:divergence`` identity.  Width buckets come from the shared ``buckets`` tuple and batch
+bucket)`` — plus the *backend* and, for the exact backend, the fitted
+*divergence* (a static jit argument of the fused kernels), so engines
+serving different Bregman divergences compile disjoint executables and can
+never cross-contaminate each other's cache.  Each engine's
+``metrics().dispatch_key`` reports its default ``backend:divergence``
+identity.  Width buckets come from the shared ``buckets`` tuple and batch
 buckets are powers of two up to ``max_batch``, so steady-state traffic
-touches at most ``len(buckets) * log2(max_batch)`` executables per
-``n_iters`` — whatever widths, alphas, and arrival orders users produce.
-``n_iters`` itself is a static scan length, NOT bucketed (changing it
-changes the math): a deployment should pin it to a small recipe set, since
-every distinct value compiles its own executable grid.
+touches at most ``backends * len(buckets) * log2(max_batch)`` executables
+per ``n_iters`` — whatever widths, alphas, and arrival orders users
+produce.  ``n_iters`` itself is a static scan length, NOT bucketed
+(changing it changes the math): a deployment should pin it to a small
+recipe set, since every distinct value compiles its own executable grid.
 
 Buffer reuse
 ------------
@@ -84,17 +98,20 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.core.label_prop import route_backend
 from repro.serving.metrics import EngineMetrics, MetricsSnapshot
 from repro.serving.propagate import (DEFAULT_WIDTH_BUCKETS, PropagateRequest,
                                      bucket_width)
-from repro.serving.queue import QueueEntry, QueueFull, RequestQueue
+from repro.serving.queue import (DISCIPLINES, DeadlineExceeded, QueueEntry,
+                                 QueueFull, RequestQueue)
 
-__all__ = ["PropagateEngine", "QueueFull", "PropagateRequest"]
+__all__ = ["PropagateEngine", "QueueFull", "DeadlineExceeded",
+           "PropagateRequest"]
 
 
 def _batch_bucket(n: int, cap: int) -> int:
@@ -112,16 +129,38 @@ class PropagateEngine:
     ----------
     vdt:         the fitted ``VariationalDualTree`` all requests run against.
     max_batch:   most requests coalesced into one device dispatch.
-    max_wait_ms: how long the scheduler lingers for a fuller batch once the
-                 first request of an iteration has arrived.
+    max_wait_ms: cap on how long the scheduler lingers for a fuller batch
+                 once the first request of an iteration has arrived; the
+                 adaptive policy picks the actual window per iteration
+                 (0 disables lingering entirely).
     max_queue:   bounded-queue capacity; ``submit`` beyond it blocks or
                  raises :class:`QueueFull` (backpressure).
     buckets:     label-width buckets, shared with ``propagate_many``.
     coalesce_widths: pad a whole group to its largest width bucket so mixed
                  widths share one dispatch (default; see module docstring).
-    backend:     ``"vdt"`` (fitted approximation, default) or ``"exact"``
-                 (streamed exact P via the distance-reusing fused kernel);
-                 see *Backends* in the module docstring.
+    backend:     default transition-matrix backend — ``"vdt"`` (fitted
+                 approximation), ``"exact"`` (streamed exact P via the
+                 distance-reusing fused kernel) or ``"auto"`` (exact for
+                 small N).  Individual requests may override it; see
+                 *Backends* in the module docstring.
+    policy:      queue discipline — ``"fifo"`` (default, submission order),
+                 ``"priority"`` (highest ``PropagateRequest.priority``
+                 first with starvation-bounded aging) or ``"edf"``
+                 (earliest ``deadline_ms`` first, expired requests
+                 fast-fail with :class:`DeadlineExceeded`).
+    aging_ms:    the ``"priority"`` discipline's starvation bound: waiting
+                 ``aging_ms`` is worth one priority level, so a
+                 default-priority request is never overtaken by
+                 higher-priority traffic submitted more than
+                 ``aging_ms * (priority gap)`` after it.
+    adaptive_linger: scale the batching window by the observed arrival
+                 rate (EWMA of inter-arrival gaps) instead of always
+                 lingering toward ``max_wait_ms``.
+    clock:       monotonic time source (seconds).  Injectable so the
+                 scheduler's timing decisions — linger windows, aging
+                 ranks, deadline expiry, latency metrics — are
+                 deterministic under test fake clocks instead of
+                 wall-clock-flaky on loaded CI runners.
     start:       spawn the background scheduler thread.  ``start=False``
                  leaves scheduling to explicit ``step``/``flush`` calls —
                  deterministic, single-threaded, what the unit tests drive.
@@ -137,31 +176,47 @@ class PropagateEngine:
         buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
         coalesce_widths: bool = True,
         backend: str = "vdt",
+        policy: str = "fifo",
+        aging_ms: float = 500.0,
+        adaptive_linger: bool = True,
+        clock: Callable[[], float] = time.perf_counter,
         start: bool = True,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        if backend not in ("vdt", "exact"):
+        if policy not in DISCIPLINES:
             raise ValueError(
-                f"backend must be 'vdt' or 'exact', got {backend!r}")
+                f"policy must be one of {DISCIPLINES}, got {policy!r}")
         self.vdt = vdt
-        self.backend = backend
+        self.n = int(vdt.tree.n_points)
+        # the engine-level backend is the per-request DEFAULT; "auto"
+        # resolves here against the fitted problem size (route_backend also
+        # rejects unknown tags at construction, not at first dispatch)
+        self.backend = route_backend(backend, "vdt", n=self.n)
         # divergence rides in the dispatch key: engines over different
         # fitted divergences never share a compiled executable (the exact
         # backend keys its kernels statically on the divergence; the VDT
         # backend's q encodes it as data), and the metrics snapshot exposes
         # the key so operators can tell mixed-divergence deployments apart
         self.divergence = vdt.divergence_name
-        self.dispatch_key = f"{backend}:{self.divergence}"
-        self.n = int(vdt.tree.n_points)
+        self.dispatch_key = f"{self.backend}:{self.divergence}"
+        self.policy = policy
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
+        self.aging_ms = float(aging_ms)
+        self.adaptive_linger = bool(adaptive_linger)
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.coalesce_widths = bool(coalesce_widths)
-        self._queue = RequestQueue(max_queue)
+        self._clock = clock
+        self._queue = RequestQueue(max_queue, discipline=policy,
+                                   aging_s=self.aging_ms / 1e3, clock=clock)
         self._metrics = EngineMetrics()
         self._seq = 0
         self._in_flight = 0
+        # arrival-rate estimate feeding the adaptive linger window
+        self._ewma_gap_s: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+        self._linger_window_ms = float("nan")
         self._state_lock = threading.Lock()
         self._stop = threading.Event()
         self._closed = False
@@ -176,16 +231,21 @@ class PropagateEngine:
 
     # -------------------------------------------------------------- warmup
     def warmup(self, widths: Optional[Sequence[int]] = None,
-               n_iters: Sequence[int] = (500,)) -> int:
+               n_iters: Sequence[int] = (500,),
+               backends: Optional[Sequence[str]] = None) -> int:
         """Pre-compile every dispatch executable this traffic can reach.
 
         The scheduler only ever issues shapes ``(batch bucket, N, width
         bucket)``, so compiling the full grid up front — every power-of-two
         batch bucket up to ``max_batch`` crossed with the width buckets that
         ``widths`` (default: all configured buckets) fall into, per
-        ``n_iters`` value — guarantees measurement/production traffic never
-        stalls on a compile.  Returns the number of executables warmed.
-        Alpha is a traced argument, so no alpha values need covering.
+        ``n_iters`` value and per backend — guarantees
+        measurement/production traffic never stalls on a compile.
+        ``backends`` defaults to the engine's default backend only; a
+        hybrid deployment that tags requests onto the other backend should
+        pass e.g. ``backends=("vdt", "exact")``.  Returns the number of
+        executables warmed.  Alpha is a traced argument, so no alpha values
+        need covering.
         """
         cbs = sorted(set(bucket_width(int(w), self.buckets)
                          for w in (widths or self.buckets)))
@@ -196,15 +256,17 @@ class PropagateEngine:
             b <<= 1
         bbs.append(self.max_batch)
         count = 0
-        for ni in n_iters:
-            for cb in cbs:
-                for bb in bbs:
-                    out = self.vdt.label_propagate(
-                        np.zeros((bb, self.n, cb), np.float32),
-                        alpha=np.zeros((bb,), np.float32),
-                        n_iters=int(ni), batched=True, backend=self.backend)
-                    jax.block_until_ready(out)
-                    count += 1
+        for be in (backends or (self.backend,)):
+            be = route_backend(be, self.backend, n=self.n)
+            for ni in n_iters:
+                for cb in cbs:
+                    for bb in bbs:
+                        out = self.vdt.label_propagate(
+                            np.zeros((bb, self.n, cb), np.float32),
+                            alpha=np.zeros((bb,), np.float32),
+                            n_iters=int(ni), batched=True, backend=be)
+                        jax.block_until_ready(out)
+                        count += 1
         return count
 
     # ------------------------------------------------------------ submission
@@ -212,10 +274,16 @@ class PropagateEngine:
                timeout: Optional[float] = None) -> Future:
         """Enqueue one request; returns the future of its (N, C) answer.
 
-        Shape problems surface here, not at dispatch.  When the queue is
-        full, ``block=True`` waits (up to ``timeout``) for capacity and
-        ``block=False`` raises :class:`QueueFull` immediately.  The future
-        supports ``cancel()`` any time before its dispatch starts.
+        Shape/route problems surface here, not at dispatch: the label
+        matrix must be ``(N, C)`` with ``C`` inside a width bucket, the
+        backend tag must resolve (see
+        :func:`~repro.core.label_prop.route_backend`), and ``deadline_ms``
+        must be positive when given.  When the queue is full, ``block=True``
+        waits (up to ``timeout``) for capacity and ``block=False`` raises
+        :class:`QueueFull` immediately.  The future supports ``cancel()``
+        any time before its dispatch starts; under ``policy="edf"`` it may
+        instead resolve with :class:`DeadlineExceeded` if the deadline
+        passes while it is still queued.
         """
         if self._closed:
             raise RuntimeError("engine is shut down")
@@ -226,13 +294,39 @@ class PropagateEngine:
             raise ValueError(
                 f"y0 must be (N={self.n}, C), got {y0.shape}")
         bucket_width(y0.shape[1], self.buckets)  # width must fit a bucket
+        backend = route_backend(request.backend, self.backend, n=self.n)
+        deadline_ms = request.deadline_ms
+        if deadline_ms is not None:
+            deadline_ms = float(deadline_ms)
+            if not deadline_ms > 0:
+                raise ValueError(
+                    f"deadline_ms must be > 0, got {deadline_ms}")
         fut: Future = Future()
+        now = self._clock()
         with self._state_lock:
             seq = self._seq
             self._seq += 1
-        entry = QueueEntry(seq=seq, request=PropagateRequest(
-            y0=y0, alpha=float(request.alpha), n_iters=int(request.n_iters)),
-            future=fut, t_submit=time.perf_counter())
+            # EWMA of inter-arrival gaps -> the adaptive linger's rate
+            # estimate; beta 0.25 tracks bursts within ~4 arrivals while
+            # smoothing one-off stalls
+            if self._last_arrival is not None:
+                gap = max(now - self._last_arrival, 0.0)
+                if self._ewma_gap_s is None:
+                    self._ewma_gap_s = gap
+                else:
+                    self._ewma_gap_s += 0.25 * (gap - self._ewma_gap_s)
+            self._last_arrival = now
+        entry = QueueEntry(
+            seq=seq,
+            request=PropagateRequest(
+                y0=y0, alpha=float(request.alpha),
+                n_iters=int(request.n_iters),
+                priority=int(request.priority), deadline_ms=deadline_ms,
+                backend=backend),
+            future=fut, t_submit=now,
+            priority=int(request.priority),
+            t_deadline=None if deadline_ms is None
+            else now + deadline_ms / 1e3)
         try:
             self._queue.put(entry, block=block, timeout=timeout)
         except QueueFull:
@@ -251,19 +345,32 @@ class PropagateEngine:
     def step(self) -> int:
         """One synchronous scheduler iteration: drain + dispatch, no linger.
 
-        Returns the number of futures resolved (results + failures).  This
-        is the whole scheduler — the background thread calls the same code
-        after its batching wait — so tests drive it deterministically.
+        Returns the number of futures resolved (results, failures, and
+        expired fast-fails).  This is the whole scheduler — the background
+        thread calls the same code after its batching wait — so tests drive
+        it deterministically.
         """
-        live, cancelled = self._queue.drain(self.max_batch)
+        live, cancelled, expired = self._queue.drain(self.max_batch)
         if cancelled:
             self._metrics.count("cancelled", len(cancelled))
+        resolved = 0
+        for entry in expired:
+            # edf fast-fail: the deadline passed while queued, so resolve
+            # with the pinned exception instead of wasting a dispatch slot
+            if entry.future.set_running_or_notify_cancel():
+                entry.future.set_exception(DeadlineExceeded(
+                    f"deadline_ms={entry.request.deadline_ms} expired "
+                    f"before dispatch"))
+                self._metrics.count("expired")
+                resolved += 1
+            else:
+                self._metrics.count("cancelled")
         if not live:
-            return 0
+            return resolved
         with self._state_lock:
             self._in_flight += len(live)
         try:
-            return self._dispatch(live)
+            return resolved + self._dispatch(live)
         finally:
             with self._state_lock:
                 self._in_flight -= len(live)
@@ -277,18 +384,50 @@ class PropagateEngine:
 
     # while lingering, arrivals quiescing for this long end the batching
     # window early — resubmit bursts from closed-loop clients land within a
-    # few of these, so the window adapts to offered load instead of always
-    # paying the full max_wait_ms (low load) or dispatching partial bursts
-    # (high load with a short fixed wait)
+    # few of these, so a lone request never waits out the window even when
+    # the rate estimate is stale
     _QUIESCE_S = 1e-3
 
+    def _linger_window_s(self) -> float:
+        """Pick this iteration's batching window (seconds).
+
+        Rate-adaptive: the EWMA inter-arrival gap estimates how long the
+        remaining ``max_batch - queued`` slots take to fill, and that is
+        the window — clamped to ``[0, max_wait_ms]`` (no estimate yet falls
+        back to the cap; the quiesce early-exit protects lone requests
+        either way).  Under ``policy="edf"`` the window is additionally
+        capped at the earliest queued deadline so lingering can never
+        itself expire the most urgent request.
+        """
+        window = cap = self.max_wait_ms / 1e3
+        if self.adaptive_linger:
+            with self._state_lock:
+                gap = self._ewma_gap_s
+            if gap is not None:
+                missing = max(0, self.max_batch - len(self._queue))
+                window = min(cap, gap * missing)
+        nearest = self._queue.next_deadline()
+        if nearest is not None:
+            window = min(window, max(0.0, nearest - self._clock()))
+        self._linger_window_ms = window * 1e3
+        return window
+
     def _linger(self) -> None:
-        """Batching window: wait up to ``max_wait_ms`` for a fuller batch,
-        ending early once the batch is full or arrivals stop coming."""
-        deadline = time.perf_counter() + self.max_wait_ms / 1e3
+        """Batching window: wait up to the adaptive window for a fuller
+        batch, ending early once the batch is full or arrivals stop."""
+        window = self._linger_window_s()
+        if window <= 0:
+            return
+        deadline = self._clock() + window
         seen = len(self._queue)
         while seen < self.max_batch:
-            remaining = deadline - time.perf_counter()
+            # re-check the most urgent queued deadline every iteration: a
+            # tight-deadline request ARRIVING mid-linger must shrink the
+            # window, or the linger itself could expire it
+            nearest = self._queue.next_deadline()
+            if nearest is not None and nearest < deadline:
+                deadline = nearest
+            remaining = deadline - self._clock()
             if remaining <= 0:
                 return
             self._queue.wait_atleast(
@@ -314,20 +453,24 @@ class PropagateEngine:
 
     def _dispatch(self, entries: list[QueueEntry]) -> int:
         """Group, pad, and serve one drained microbatch."""
-        # group by n_iters (+ width bucket unless coalescing); alpha always
-        # rides as a traced array and never fragments a group
-        groups: dict[tuple[int, int], list[QueueEntry]] = {}
+        # group by (n_iters, backend) (+ width bucket unless coalescing):
+        # only requests sharing a scan length AND a transition matrix can
+        # share a dispatch.  Backends were resolved at submit, so None /
+        # "auto" tags that landed on the same concrete backend coalesce.
+        # Alpha always rides as a traced array and never fragments a group.
+        groups: dict[tuple[int, str, int], list[QueueEntry]] = {}
         for entry in entries:
             if not entry.future.set_running_or_notify_cancel():
                 self._metrics.count("cancelled")  # cancelled post-drain
                 continue
             req = entry.request
             cb = bucket_width(req.y0.shape[1], self.buckets)
-            key = (req.n_iters, 0 if self.coalesce_widths else cb)
+            key = (req.n_iters, req.backend,
+                   0 if self.coalesce_widths else cb)
             groups.setdefault(key, []).append(entry)
 
         resolved = 0
-        for (n_iters, cb), group in sorted(groups.items()):
+        for (n_iters, backend, cb), group in sorted(groups.items()):
             if self.coalesce_widths:
                 cb = max(bucket_width(e.request.y0.shape[1], self.buckets)
                          for e in group)
@@ -344,7 +487,7 @@ class PropagateEngine:
                     alphas[k] = entry.request.alpha
                 out = self.vdt.label_propagate(
                     stack, alpha=alphas, n_iters=n_iters, batched=True,
-                    backend=self.backend)
+                    backend=backend)
                 jax.block_until_ready(out)
             except Exception as exc:  # resolve the group, keep scheduling
                 for entry in group:
@@ -353,11 +496,15 @@ class PropagateEngine:
                 resolved += len(group)
                 continue
             self._metrics.record_dispatch(len(group))
-            t_done = time.perf_counter()
+            t_done = self._clock()
             for k, entry in enumerate(group):
                 c = entry.request.y0.shape[1]
                 entry.future.set_result(out[k, :, :c])
                 self._metrics.record_latency(t_done - entry.t_submit)
+                if entry.t_deadline is not None and t_done > entry.t_deadline:
+                    # answered, but late: visible in metrics so operators
+                    # can tell "meets deadlines" from "merely completes"
+                    self._metrics.count("deadline_missed")
             self._metrics.count("completed", len(group))
             resolved += len(group)
         return resolved
@@ -368,7 +515,8 @@ class PropagateEngine:
             in_flight = self._in_flight
         return self._metrics.snapshot(
             queue_depth=len(self._queue), in_flight=in_flight,
-            dispatch_key=self.dispatch_key)
+            dispatch_key=self.dispatch_key, policy=self.policy,
+            linger_window_ms=self._linger_window_ms)
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; serve (``wait=True``) or cancel the backlog.
@@ -391,10 +539,11 @@ class PropagateEngine:
         if wait:
             self.flush()
         else:
-            live, cancelled = self._queue.drain(self._queue.maxsize)
-            for entry in live:
+            live, cancelled, expired = self._queue.drain(self._queue.maxsize)
+            for entry in live + expired:
                 entry.future.cancel()
-            self._metrics.count("cancelled", len(live) + len(cancelled))
+            self._metrics.count(
+                "cancelled", len(live) + len(cancelled) + len(expired))
 
     def __enter__(self) -> "PropagateEngine":
         return self

@@ -1,11 +1,11 @@
 """Engine observability: thread-safe counters + latency quantiles.
 
 The engine records one event per lifecycle transition (submit, reject,
-cancel, dispatch, complete); :meth:`EngineMetrics.snapshot` folds them into
-an immutable :class:`MetricsSnapshot` that benchmarks and operators read.
-Latencies live in a bounded ring (newest :data:`LATENCY_WINDOW` samples), so
-a long-running engine reports *recent* p50/p95 rather than lifetime ones and
-memory stays O(1).
+cancel, expire, dispatch, complete); :meth:`EngineMetrics.snapshot` folds
+them into an immutable :class:`MetricsSnapshot` that benchmarks and
+operators read.  Latencies live in a bounded ring (newest
+:data:`LATENCY_WINDOW` samples), so a long-running engine reports *recent*
+p50/p95 rather than lifetime ones and memory stays O(1).
 """
 from __future__ import annotations
 
@@ -31,30 +31,38 @@ class MetricsSnapshot:
     """Point-in-time view of engine health (all times milliseconds).
 
     Counter fields are monotone lifetime totals; gauge fields
-    (``queue_depth``, ``in_flight``) are instantaneous; latency quantiles
-    cover the newest :data:`LATENCY_WINDOW` completed requests, measured
-    from queue accept (``submit`` return) to future resolution — i.e. they
-    include queueing/linger time, not just device time.  Conservation:
-    every accepted request ends in exactly one of ``completed``, ``failed``
-    or ``cancelled`` (``submitted`` minus those three = queued or in
-    flight); ``rejected`` requests were never accepted and appear in no
-    other counter.
+    (``queue_depth``, ``in_flight``, ``linger_window_ms``) are
+    instantaneous; latency quantiles cover the newest
+    :data:`LATENCY_WINDOW` completed requests, measured from queue accept
+    (``submit`` return) to future resolution — i.e. they include
+    queueing/linger time, not just device time.  Conservation: every
+    accepted request ends in exactly one of ``completed``, ``failed``,
+    ``cancelled`` or ``expired`` (``submitted`` minus those four = queued
+    or in flight); ``rejected`` requests were never accepted and appear in
+    no other counter.  ``deadline_missed`` is an annotation on
+    ``completed``: answers that resolved successfully but after their
+    request's deadline (only the ``edf`` discipline fast-fails instead).
     """
 
     dispatch_key: str = ""  # engine identity: "backend:divergence" — two
     #   engines sharing a process but differing in backend or fitted
     #   divergence report different keys, mirroring the fact that their
     #   dispatches can never share (or cross-contaminate) a compiled
-    #   executable
+    #   executable.  A hybrid engine (per-request backends) reports its
+    #   DEFAULT backend here; per-group backends ride the dispatch itself.
+    policy: str = ""  # queue discipline: "fifo" | "priority" | "edf"
     submitted: int = 0  # accepted into the queue (excludes rejected)
     rejected: int = 0  # refused at submit: queue at capacity (backpressure)
     cancelled: int = 0  # future.cancel() won before the dispatch started
+    expired: int = 0  # edf fast-fail: deadline passed while queued
+    deadline_missed: int = 0  # completed, but later than the deadline
     completed: int = 0  # futures resolved with a result
     failed: int = 0  # futures resolved with an exception (bad dispatch)
     dispatches: int = 0  # batched device dispatches issued
     batched_requests: int = 0  # real (non-padding) requests in those dispatches
     queue_depth: int = 0  # entries waiting right now (gauge)
     in_flight: int = 0  # drained but not yet resolved (gauge)
+    linger_window_ms: float = float("nan")  # current adaptive batching window
     latency_p50_ms: float = float("nan")  # windowed submit->result median
     latency_p95_ms: float = float("nan")  # windowed tail latency
     latency_mean_ms: float = float("nan")  # windowed mean
@@ -76,6 +84,8 @@ class EngineMetrics:
             submitted=0,
             rejected=0,
             cancelled=0,
+            expired=0,
+            deadline_missed=0,
             completed=0,
             failed=0,
             dispatches=0,
@@ -96,16 +106,24 @@ class EngineMetrics:
         with self._lock:
             self._latencies_ms.append(seconds * 1e3)
 
-    def snapshot(self, queue_depth: int = 0, in_flight: int = 0,
-                 dispatch_key: str = "") -> MetricsSnapshot:
+    def snapshot(
+        self,
+        queue_depth: int = 0,
+        in_flight: int = 0,
+        dispatch_key: str = "",
+        policy: str = "",
+        linger_window_ms: float = float("nan"),
+    ) -> MetricsSnapshot:
         with self._lock:
             lat = sorted(self._latencies_ms)
             counts = dict(self._counts)
         mean = sum(lat) / len(lat) if lat else float("nan")
         return MetricsSnapshot(
             dispatch_key=dispatch_key,
+            policy=policy,
             queue_depth=queue_depth,
             in_flight=in_flight,
+            linger_window_ms=linger_window_ms,
             latency_p50_ms=_quantile(lat, 0.50),
             latency_p95_ms=_quantile(lat, 0.95),
             latency_mean_ms=mean,

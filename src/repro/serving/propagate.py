@@ -66,10 +66,28 @@ ALPHA_SIG_DIGITS = 6
 
 @dataclasses.dataclass(frozen=True)
 class PropagateRequest:
-    """One LP query: seed labels (N, C) plus its propagation recipe."""
+    """One LP query: seed labels (N, C), its recipe, and its QoS tags.
+
+    ``alpha`` / ``n_iters`` are the propagation recipe (paper eq. 15).  The
+    remaining fields are scheduler-v2 QoS tags, all optional:
+
+    * ``priority`` — larger = more urgent; consumed by the engine's
+      ``"priority"`` queue discipline (ignored by ``"fifo"``/``"edf"``).
+    * ``deadline_ms`` — relative deadline from submit; under the ``"edf"``
+      discipline requests are served earliest-deadline-first and fast-fail
+      with :class:`~repro.serving.queue.DeadlineExceeded` once expired.
+      Other disciplines still count late completions in the metrics.
+    * ``backend`` — per-request transition-matrix routing: ``None`` (the
+      serving default), ``"vdt"``, ``"exact"`` (e.g. validation-tagged
+      traffic pinned to the ground-truth eq.-3 walk), or ``"auto"``
+      (exact for small N); see :func:`repro.core.label_prop.route_backend`.
+    """
     y0: jax.Array
     alpha: float = 0.01
     n_iters: int = 500
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    backend: Optional[str] = None
 
 
 def bucket_width(c: int, buckets: Sequence[int]) -> int:
@@ -93,9 +111,18 @@ def canonical_alpha(alpha: float) -> float:
 
 
 def group_key(alpha: float, n_iters: int, c: int,
-              buckets: Sequence[int]) -> tuple[float, int, int]:
-    """Dispatch-group key ``(canonical alpha, n_iters, width bucket)``."""
-    return (canonical_alpha(alpha), int(n_iters), bucket_width(c, buckets))
+              buckets: Sequence[int],
+              backend: str = "vdt") -> tuple[float, int, int, str]:
+    """Dispatch-group key ``(canonical alpha, n_iters, width bucket, backend)``.
+
+    ``backend`` must already be resolved (``"vdt"`` / ``"exact"``, see
+    :func:`repro.core.label_prop.route_backend`): only requests running
+    against the same transition matrix can share a dispatch, and resolving
+    BEFORE keying means ``None``/``"auto"`` tags that route to the same
+    concrete backend never fragment an otherwise-coalescible batch.
+    """
+    return (canonical_alpha(alpha), int(n_iters), bucket_width(c, buckets),
+            backend)
 
 
 def pad_to_width(y0: jax.Array, cb: int) -> jax.Array:
@@ -125,6 +152,8 @@ def propagate_many(
     width bucket are answered by a single batched ``label_propagate``
     dispatch (chunked at ``max_batch``).
     """
+    from repro.core.label_prop import route_backend
+
     buckets = tuple(sorted(set(int(b) for b in buckets)))
     n = vdt.tree.n_points
     results: list[Optional[jax.Array]] = [None] * len(requests)
@@ -136,15 +165,16 @@ def propagate_many(
             raise ValueError(
                 f"request {idx}: y0 must be (N={n}, C), got {y0.shape}")
         c = int(y0.shape[1])
-        key = group_key(req.alpha, req.n_iters, c, buckets)
+        backend = route_backend(req.backend, "vdt", n=n)
+        key = group_key(req.alpha, req.n_iters, c, buckets, backend)
         groups.setdefault(key, []).append((idx, y0, c))
 
-    for (alpha, n_iters, cb), items in groups.items():
+    for (alpha, n_iters, cb, backend), items in groups.items():
         for lo in range(0, len(items), max_batch):
             chunk = items[lo:lo + max_batch]
             stack = stack_group([y0 for _, y0, _ in chunk], cb)
             out = vdt.label_propagate(stack, alpha=alpha, n_iters=n_iters,
-                                      batched=True)
+                                      batched=True, backend=backend)
             for k, (idx, _, c) in enumerate(chunk):
                 results[idx] = out[k, :, :c]
     return results  # type: ignore[return-value]

@@ -1,7 +1,7 @@
-"""Bounded request queue for the continuous-batching engine.
+"""Pluggable queue-discipline layer for the continuous-batching engine.
 
-A thin condition-variable wrapper around a deque, purpose-built for the
-scheduler's access pattern:
+A condition-variable wrapper around an ordered container, purpose-built for
+the scheduler's access pattern:
 
 * producers (``PropagateEngine.submit``) ``put`` one entry, either failing
   fast (``QueueFull``) or blocking until space frees — the engine's
@@ -13,6 +13,39 @@ scheduler's access pattern:
 ``stdlib queue.Queue`` fits none of this: no multi-item atomic drain, no
 cancellation filtering, and its unfinished-task accounting is dead weight
 here.
+
+Queue disciplines (scheduler v2)
+--------------------------------
+``discipline`` selects the order ``drain`` pops entries in:
+
+``"fifo"`` (default)
+    Submission order — bit-identical to the original single-discipline
+    queue (a plain deque; ``drain`` is ``popleft``).
+
+``"priority"``
+    Highest :attr:`QueueEntry.priority` first, with **starvation-bounded
+    aging**: an entry's effective rank is ``priority - t_submit /
+    aging_s``, so every second spent waiting is worth ``1 / aging_s``
+    priority levels.  Two consequences, both deterministic because the
+    rank is a static function of ``(priority, t_submit)``: entries of
+    equal priority stay FIFO among themselves, and a default-priority
+    entry outranks any higher-priority entry submitted more than
+    ``aging_s * (priority gap)`` later — no entry can be starved for
+    longer than that bound (plus one service round).
+
+``"edf"``
+    Earliest-deadline-first: smallest absolute :attr:`QueueEntry.t_deadline`
+    first; entries without a deadline sort after every deadlined one, FIFO
+    among themselves.  ``drain`` additionally **fast-fails expired
+    entries**: anything already past its deadline is returned in the
+    ``expired`` list instead of ``live``, so a dispatch slot is never spent
+    computing an answer whose deadline has passed (the engine resolves
+    those futures with :class:`DeadlineExceeded`).
+
+Time comes from the injectable ``clock`` (default
+``time.perf_counter``) — aging ranks and expiry checks are deterministic
+under a fake clock, which is how the scheduler property tests drive this
+layer.
 
 Concurrency contract
 --------------------
@@ -29,16 +62,39 @@ dispatcher's problem (see ``PropagateEngine._dispatch``).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Optional
+from typing import Callable, Optional
 
-__all__ = ["QueueFull", "QueueEntry", "RequestQueue"]
+__all__ = [
+    "DISCIPLINES",
+    "DeadlineExceeded",
+    "QueueEntry",
+    "QueueFull",
+    "RequestQueue",
+]
+
+DISCIPLINES = ("fifo", "priority", "edf")
+
+# rank gained per second of waiting under the "priority" discipline; see
+# RequestQueue for the starvation bound it implies
+DEFAULT_AGING_S = 0.5
 
 
 class QueueFull(RuntimeError):
     """Raised by a non-blocking ``put`` when the queue is at capacity."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """An EDF request expired before its dispatch started.
+
+    Pinned API: futures of expired entries resolve with exactly this
+    exception type, so clients can catch it and shed/retry — it never
+    degrades into a generic ``RuntimeError`` or a silent late answer.
+    """
 
 
 @dataclasses.dataclass
@@ -48,24 +104,63 @@ class QueueEntry:
     seq: int  # submission order, for deterministic tie-breaks
     request: object  # PropagateRequest
     future: Future  # resolved by the dispatch that serves it
-    t_submit: float  # perf_counter at accept, for latency metrics
+    t_submit: float  # clock() at accept, for latency metrics + aging
+    priority: int = 0  # larger = more urgent ("priority" discipline)
+    t_deadline: Optional[float] = None  # absolute clock() deadline ("edf")
 
 
 class RequestQueue:
-    """Bounded FIFO with atomic multi-item drain and cancel filtering."""
+    """Bounded request queue with a pluggable pop-order discipline.
 
-    def __init__(self, maxsize: int):
+    ``drain`` atomically pops up to a microbatch in discipline order with
+    cancel filtering (and, under ``"edf"``, expiry fast-fail); ``put``
+    blocks or raises :class:`QueueFull` — the backpressure surface.
+    """
+
+    def __init__(
+        self,
+        maxsize: int,
+        discipline: str = "fifo",
+        *,
+        aging_s: float = DEFAULT_AGING_S,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        if discipline not in DISCIPLINES:
+            raise ValueError(f"discipline must be one of {DISCIPLINES}, got {discipline!r}")
+        if aging_s <= 0:
+            raise ValueError(f"aging_s must be > 0, got {aging_s}")
         self.maxsize = maxsize
-        self._items: deque[QueueEntry] = deque()
+        self.discipline = discipline
+        self.aging_s = float(aging_s)
+        self._clock = clock
+        # fifo keeps the original deque (bit-identical behavior); the other
+        # disciplines keep a heap of (sort key, seq, entry) triples — both
+        # ranks are static functions of the entry, so heap order is exact
+        self._fifo: deque[QueueEntry] = deque()
+        self._heap: list[tuple[float, int, QueueEntry]] = []
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
 
+    def _key(self, entry: QueueEntry) -> float:
+        """Heap sort key (smaller pops first) — static per entry."""
+        if self.discipline == "priority":
+            # effective rank priority - t_submit/aging_s, highest first:
+            # waiting 1 * aging_s is worth one priority level, so the rank
+            # gap between an old low-priority entry and newer high-priority
+            # traffic closes at a fixed, clock-driven rate
+            return -(entry.priority - entry.t_submit / self.aging_s)
+        # edf: earliest absolute deadline first; deadline-less entries last
+        return entry.t_deadline if entry.t_deadline is not None else float("inf")
+
     def __len__(self) -> int:
         with self._lock:
-            return len(self._items)
+            return len(self._fifo) + len(self._heap)
+
+    def _size_locked(self) -> int:
+        return len(self._fifo) + len(self._heap)
 
     def put(self, entry: QueueEntry, block: bool = True, timeout: Optional[float] = None) -> None:
         """Append ``entry``; raise :class:`QueueFull` if no space appears.
@@ -76,19 +171,22 @@ class RequestQueue:
         producers either slow down (blocking) or shed load (QueueFull).
         """
         with self._not_full:
-            if len(self._items) >= self.maxsize:
+            if self._size_locked() >= self.maxsize:
                 if not block:
                     raise QueueFull(f"queue at capacity ({self.maxsize}); retry or raise max_queue")
-                has_room = lambda: len(self._items) < self.maxsize  # noqa: E731
+                has_room = lambda: self._size_locked() < self.maxsize  # noqa: E731
                 if not self._not_full.wait_for(has_room, timeout=timeout):
                     raise QueueFull(f"queue still full after {timeout}s; engine saturated")
-            self._items.append(entry)
+            if self.discipline == "fifo":
+                self._fifo.append(entry)
+            else:
+                heapq.heappush(self._heap, (self._key(entry), entry.seq, entry))
             self._not_empty.notify()
 
     def wait_nonempty(self, timeout: Optional[float] = None) -> bool:
         """Block until at least one entry is queued (or timeout); True if so."""
         with self._not_empty:
-            return self._not_empty.wait_for(lambda: bool(self._items), timeout=timeout)
+            return self._not_empty.wait_for(lambda: self._size_locked() > 0, timeout=timeout)
 
     def wait_atleast(self, n: int, timeout: Optional[float] = None) -> bool:
         """Block until ``>= n`` entries are queued (or timeout); True if so.
@@ -98,24 +196,54 @@ class RequestQueue:
         dispatching a partial one.
         """
         with self._not_empty:
-            return self._not_empty.wait_for(lambda: len(self._items) >= n, timeout=timeout)
+            return self._not_empty.wait_for(lambda: self._size_locked() >= n, timeout=timeout)
 
-    def drain(self, max_items: int) -> tuple[list[QueueEntry], list[QueueEntry]]:
-        """Atomically pop up to ``max_items`` live entries (FIFO order).
+    def next_deadline(self) -> Optional[float]:
+        """Smallest absolute deadline currently queued (``edf`` only).
 
-        Returns ``(live, cancelled)``: entries whose future was cancelled
-        while queued never reach a dispatch, but still free queue capacity
-        (and don't count against ``max_items``).
+        The engine's linger caps its batching window at this instant so
+        waiting for a fuller batch can never itself expire the most urgent
+        request.  ``None`` when no queued entry carries a deadline.
+        """
+        with self._lock:
+            if self.discipline != "edf" or not self._heap:
+                return None
+            key = self._heap[0][0]
+            return key if key != float("inf") else None
+
+    def _pop_locked(self) -> QueueEntry:
+        if self.discipline == "fifo":
+            return self._fifo.popleft()
+        return heapq.heappop(self._heap)[2]
+
+    def drain(self, max_items: int) -> tuple[list[QueueEntry], list[QueueEntry], list[QueueEntry]]:
+        """Atomically pop up to ``max_items`` live entries in discipline order.
+
+        Returns ``(live, cancelled, expired)``: entries whose future was
+        cancelled while queued never reach a dispatch, and — under the
+        ``"edf"`` discipline — entries already past their deadline are
+        fast-failed into ``expired`` instead of wasting a dispatch slot.
+        Both still free queue capacity and don't count against
+        ``max_items``.
         """
         live: list[QueueEntry] = []
         cancelled: list[QueueEntry] = []
+        expired: list[QueueEntry] = []
+        now = self._clock() if self.discipline == "edf" else 0.0
         with self._not_full:
-            while self._items and len(live) < max_items:
-                entry = self._items.popleft()
+            while self._size_locked() and len(live) < max_items:
+                entry = self._pop_locked()
                 if entry.future.cancelled():
                     cancelled.append(entry)
                     continue
+                if (
+                    self.discipline == "edf"
+                    and entry.t_deadline is not None
+                    and now > entry.t_deadline
+                ):
+                    expired.append(entry)
+                    continue
                 live.append(entry)
-            if live or cancelled:
+            if live or cancelled or expired:
                 self._not_full.notify_all()
-        return live, cancelled
+        return live, cancelled, expired

@@ -1,0 +1,430 @@
+"""Scheduler v2: queue disciplines, adaptive linger, hybrid backend routing.
+
+Everything here is deterministic: the queue-discipline property tests drive
+``RequestQueue`` directly with hand-built entries and a fake clock, and the
+engine integration tests use ``start=False`` + ``step``/``flush`` with the
+same fake clock injected — no wall-clock sleeps, no thread races, so the
+assertions hold on arbitrarily loaded CI runners.
+"""
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.label_prop import AUTO_EXACT_MAX_N, route_backend
+from repro.serving.engine import PropagateEngine
+from repro.serving.propagate import PropagateRequest
+from repro.serving.queue import (DISCIPLINES, DeadlineExceeded, QueueEntry,
+                                 RequestQueue)
+
+
+class FakeClock:
+    """Deterministic time source for scheduler tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _entry(seq, *, t_submit=0.0, priority=0, t_deadline=None):
+    return QueueEntry(seq=seq, request=f"req{seq}", future=Future(),
+                      t_submit=t_submit, priority=priority,
+                      t_deadline=t_deadline)
+
+
+def _drain_seqs(q, max_items=1000):
+    live, cancelled, expired = q.drain(max_items)
+    return [e.seq for e in live]
+
+
+# --------------------------------------------------------------- validation
+def test_queue_rejects_bad_config():
+    with pytest.raises(ValueError):
+        RequestQueue(4, discipline="lifo")
+    with pytest.raises(ValueError):
+        RequestQueue(0)
+    with pytest.raises(ValueError):
+        RequestQueue(4, aging_s=0.0)
+    assert set(DISCIPLINES) == {"fifo", "priority", "edf"}
+
+
+# ----------------------------------------------------------- fifo discipline
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fifo_drain_is_submission_order(seed):
+    """FIFO stays bit-identical to the original queue: any interleaving of
+    puts and partial drains pops entries in exact submission order."""
+    rng = np.random.RandomState(seed)
+    q = RequestQueue(64, discipline="fifo")
+    next_seq, popped = 0, []
+    for _ in range(30):
+        if rng.rand() < 0.6 or len(q) == 0:
+            q.put(_entry(next_seq, t_submit=float(rng.rand())))
+            next_seq += 1
+        else:
+            popped += _drain_seqs(q, max_items=int(rng.randint(1, 4)))
+    popped += _drain_seqs(q)
+    assert popped == list(range(next_seq))
+
+
+def test_fifo_drain_filters_cancelled():
+    q = RequestQueue(8)
+    entries = [_entry(i) for i in range(5)]
+    for e in entries:
+        q.put(e)
+    entries[1].future.cancel()
+    entries[3].future.cancel()
+    live, cancelled, expired = q.drain(10)
+    assert [e.seq for e in live] == [0, 2, 4]
+    assert [e.seq for e in cancelled] == [1, 3]
+    assert expired == []
+    assert len(q) == 0
+
+
+# ------------------------------------------------------- priority discipline
+def test_priority_ordering_respected():
+    """Same submit instant: strictly highest priority first, FIFO ties."""
+    q = RequestQueue(16, discipline="priority")
+    for seq, pri in enumerate([0, 2, 1, 2, 0, 1]):
+        q.put(_entry(seq, t_submit=0.0, priority=pri))
+    # priority 2 entries (seq 1, 3), then 1s (2, 5), then 0s (0, 4);
+    # equal-priority entries keep submission order
+    assert _drain_seqs(q) == [1, 3, 2, 5, 0, 4]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_priority_equal_priorities_degrade_to_fifo(seed):
+    rng = np.random.RandomState(seed)
+    q = RequestQueue(64, discipline="priority", aging_s=0.5)
+    n, t = 20, 0.0
+    for seq in range(n):
+        t += float(rng.rand()) * 1e-3  # monotone arrival times
+        q.put(_entry(seq, t_submit=t, priority=3))
+    assert _drain_seqs(q) == list(range(n))
+
+
+def test_priority_aging_bounds_starvation():
+    """A default-priority entry outranks higher-priority traffic submitted
+    more than aging_s * (priority gap) later — nobody waits forever."""
+    aging = 0.5
+    q = RequestQueue(16, discipline="priority", aging_s=aging)
+    q.put(_entry(0, t_submit=0.0, priority=0))  # the would-starve entry
+    # fresh high-priority traffic *within* the aging bound still wins ...
+    q.put(_entry(1, t_submit=0.3 * aging, priority=1))
+    # ... but high-priority traffic submitted past the bound loses to it
+    q.put(_entry(2, t_submit=1.5 * aging, priority=1))
+    # a bigger priority gap scales the bound linearly (3 levels -> 3*aging):
+    # submitted just inside it wins, just past it loses
+    q.put(_entry(3, t_submit=2.9 * aging, priority=3))
+    q.put(_entry(4, t_submit=3.1 * aging, priority=3))
+    # ranks: e1=0.7, e3=0.1, e0=0.0, e4=-0.1, e2=-0.5
+    assert _drain_seqs(q) == [1, 3, 0, 4, 2]
+
+
+def test_priority_aging_rank_algebra():
+    """Pin the aging rule itself: entry A (priority pa, submitted ta) beats
+    entry B (pb, tb) iff pa - ta/aging > pb - tb/aging, ties by seq."""
+    aging = 0.25
+    rng = np.random.RandomState(5)
+    entries = [_entry(seq, t_submit=float(rng.rand() * 2), priority=int(p))
+               for seq, p in enumerate(rng.randint(0, 4, size=12))]
+    q = RequestQueue(32, discipline="priority", aging_s=aging)
+    for e in entries:
+        q.put(e)
+    want = sorted(
+        entries,
+        key=lambda e: (-(e.priority - e.t_submit / aging), e.seq))
+    assert _drain_seqs(q) == [e.seq for e in want]
+
+
+# ------------------------------------------------------------ edf discipline
+def test_edf_earliest_deadline_first_deadlineless_last():
+    clock = FakeClock(0.0)
+    q = RequestQueue(16, discipline="edf", clock=clock)
+    q.put(_entry(0, t_deadline=5.0))
+    q.put(_entry(1, t_deadline=1.0))
+    q.put(_entry(2))  # no deadline: after every deadlined entry
+    q.put(_entry(3, t_deadline=3.0))
+    q.put(_entry(4))  # ... and FIFO among themselves
+    assert q.next_deadline() == 1.0
+    assert _drain_seqs(q) == [1, 3, 0, 2, 4]
+    assert q.next_deadline() is None
+
+
+def test_edf_expired_entries_fast_fail():
+    clock = FakeClock(0.0)
+    q = RequestQueue(16, discipline="edf", clock=clock)
+    q.put(_entry(0, t_deadline=0.1))
+    q.put(_entry(1, t_deadline=10.0))
+    q.put(_entry(2))
+    clock.advance(1.0)  # entry 0 is now past its deadline
+    live, cancelled, expired = q.drain(10)
+    assert [e.seq for e in live] == [1, 2]
+    assert [e.seq for e in expired] == [0]
+    assert cancelled == []
+    # expired entries free capacity without counting against max_items
+    assert len(q) == 0
+
+
+def test_non_edf_disciplines_never_expire():
+    clock = FakeClock(0.0)
+    for disc in ("fifo", "priority"):
+        q = RequestQueue(16, discipline=disc, clock=clock)
+        q.put(_entry(0, t_deadline=0.1))
+        clock.t = 99.0
+        live, _, expired = q.drain(10)
+        assert [e.seq for e in live] == [0] and expired == []
+        clock.t = 0.0
+
+
+# ------------------------------------------------------------ backend routing
+def test_route_backend_resolution():
+    assert route_backend(None, "vdt") == "vdt"
+    assert route_backend(None, "exact") == "exact"
+    assert route_backend("vdt", "exact") == "vdt"
+    assert route_backend("exact", "vdt") == "exact"
+    assert route_backend("auto", "vdt", n=AUTO_EXACT_MAX_N) == "exact"
+    assert route_backend("auto", "vdt", n=AUTO_EXACT_MAX_N + 1) == "vdt"
+    assert route_backend("auto", "vdt", n=64, auto_exact_max_n=32) == "vdt"
+    with pytest.raises(ValueError):
+        route_backend("dense", "vdt")
+    with pytest.raises(ValueError):
+        route_backend("auto", "vdt")  # needs n
+
+
+def test_engine_resolves_default_backend_at_construction(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, start=False, backend="auto")
+    assert eng.backend == "exact"  # n=33 <= AUTO_EXACT_MAX_N
+    assert eng.dispatch_key.startswith("exact:")
+    with pytest.raises(ValueError):
+        PropagateEngine(vdt, start=False, backend="dense")
+    with pytest.raises(ValueError):
+        PropagateEngine(vdt, start=False, policy="lifo")
+
+
+# ------------------------------------------------- engine: hybrid dispatch
+def test_engine_per_request_backend_routing(small_fitted_vdt):
+    """One engine, mixed vdt/exact traffic: each answer matches its own
+    backend's single-request reference, and the group-by key fragments by
+    backend but never by alpha/width within a backend."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(21)
+    mk = lambda c: (rng.rand(x.shape[0], c) > 0.8).astype(np.float32)  # noqa: E731
+    reqs = [
+        PropagateRequest(mk(2), alpha=0.05, n_iters=6),                  # default vdt
+        PropagateRequest(mk(3), alpha=0.2, n_iters=6, backend="vdt"),
+        PropagateRequest(mk(1), alpha=0.05, n_iters=6, backend="exact"),  # validation
+        PropagateRequest(mk(2), alpha=0.1, n_iters=6, backend="auto"),   # -> exact (n=33)
+    ]
+    eng = PropagateEngine(vdt, start=False, max_batch=8)
+    futs = [eng.submit(q) for q in reqs]
+    eng.flush()
+    m = eng.metrics()
+    # 2 dispatch groups: {vdt, vdt} and {exact, auto->exact}
+    assert m.dispatches == 2 and m.completed == 4
+    backends = ["vdt", "vdt", "exact", "exact"]
+    for fut, req, be in zip(futs, reqs, backends):
+        want = vdt.label_propagate(req.y0, alpha=req.alpha,
+                                   n_iters=req.n_iters, backend=be)
+        np.testing.assert_allclose(np.asarray(fut.result(timeout=0)),
+                                   np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_engine_rejects_bad_request_backend(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, start=False)
+    with pytest.raises(ValueError):
+        eng.submit(PropagateRequest(np.zeros((x.shape[0], 2), np.float32),
+                                    backend="dense"))
+    with pytest.raises(ValueError):
+        eng.submit(PropagateRequest(np.zeros((x.shape[0], 2), np.float32),
+                                    deadline_ms=0.0))
+    assert eng.metrics().submitted == 0
+
+
+# ------------------------------------------------- engine: priority policy
+def test_engine_priority_policy_serves_urgent_first(small_fitted_vdt):
+    """With a backlog wider than max_batch, the priority engine spends its
+    first dispatch slots on the highest-priority requests."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(22)
+    y0 = (rng.rand(x.shape[0], 2) > 0.8).astype(np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="priority", max_batch=2,
+                          clock=clock)
+    futs = {}
+    for i, pri in enumerate([0, 0, 0, 5, 0, 5]):
+        futs[i] = eng.submit(PropagateRequest(y0, n_iters=4, priority=pri))
+    eng.step()  # one microbatch of 2: must be the two priority-5 requests
+    assert futs[3].done() and futs[5].done()
+    assert not any(futs[i].done() for i in (0, 1, 2, 4))
+    eng.flush()
+    assert all(f.done() for f in futs.values())
+    assert eng.metrics().completed == 6
+
+
+def test_engine_priority_aging_prevents_starvation(small_fitted_vdt):
+    """An old low-priority request eventually beats fresh high-priority
+    traffic: the fake clock ages it past aging_ms * priority gap."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(23)
+    y0 = (rng.rand(x.shape[0], 2) > 0.8).astype(np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="priority", max_batch=1,
+                          aging_ms=100.0, clock=clock)
+    old_low = eng.submit(PropagateRequest(y0, n_iters=4, priority=0))
+    clock.advance(0.35)  # 350ms > aging_ms * (3 - 0)? no: bound is 300ms
+    fresh_high = eng.submit(PropagateRequest(y0, n_iters=4, priority=3))
+    eng.step()  # the aged default-priority request wins the single slot
+    assert old_low.done() and not fresh_high.done()
+    eng.flush()
+    assert fresh_high.done()
+
+
+# ------------------------------------------------------ engine: edf policy
+def test_engine_edf_orders_by_deadline_and_fast_fails(small_fitted_vdt):
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(24)
+    y0 = (rng.rand(x.shape[0], 2) > 0.8).astype(np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="edf", max_batch=1,
+                          clock=clock)
+    tight = eng.submit(PropagateRequest(y0, n_iters=4, deadline_ms=50.0))
+    loose = eng.submit(PropagateRequest(y0, n_iters=4, deadline_ms=5000.0))
+    none = eng.submit(PropagateRequest(y0, n_iters=4))
+    eng.step()  # tightest deadline wins the single slot
+    assert tight.done() and not loose.done() and not none.done()
+
+    # expire the loose one while queued: pinned exception, no dispatch spent
+    clock.advance(10.0)
+    eng.flush()
+    with pytest.raises(DeadlineExceeded):
+        loose.result(timeout=0)
+    assert none.result(timeout=0) is not None
+    m = eng.metrics()
+    assert m.expired == 1 and m.completed == 2 and m.failed == 0
+
+
+def test_engine_counts_late_completions_without_fast_fail(small_fitted_vdt):
+    """fifo/priority policies still SERVE past-deadline requests but flag
+    them as deadline_missed — only edf fast-fails."""
+    x, vdt = small_fitted_vdt
+    rng = np.random.RandomState(25)
+    y0 = (rng.rand(x.shape[0], 2) > 0.8).astype(np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="fifo", clock=clock)
+    fut = eng.submit(PropagateRequest(y0, n_iters=4, deadline_ms=10.0))
+    clock.advance(1.0)  # way past the 10ms deadline
+    eng.flush()
+    assert fut.result(timeout=0) is not None  # still answered
+    m = eng.metrics()
+    assert m.completed == 1 and m.deadline_missed == 1 and m.expired == 0
+
+
+# -------------------------------------------------- adaptive linger window
+def test_adaptive_linger_tracks_arrival_rate(small_fitted_vdt):
+    """The EWMA gap estimate drives the window: fast arrivals shrink it,
+    and it never exceeds max_wait_ms."""
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, max_batch=4, max_wait_ms=50.0,
+                          clock=clock)
+    # no rate estimate yet: fall back to the cap
+    assert eng._linger_window_s() == pytest.approx(0.050)
+
+    for _ in range(8):  # steady 2ms inter-arrival gaps
+        clock.advance(0.002)
+        eng.submit(PropagateRequest(y0, n_iters=2))
+    assert eng._ewma_gap_s == pytest.approx(0.002, rel=1e-6)
+    # queue holds 8 >= max_batch=4 -> nothing missing -> no linger at all
+    assert eng._linger_window_s() == 0.0
+    eng.flush()
+
+    # now one lone arrival: 3 slots missing at ~2ms/arrival -> ~6ms window,
+    # far below the 50ms cap
+    clock.advance(0.002)
+    eng.submit(PropagateRequest(y0, n_iters=2))
+    assert eng._linger_window_s() == pytest.approx(3 * eng._ewma_gap_s)
+    eng.flush()
+
+    # slow traffic: gaps bigger than the cap clamp to max_wait_ms
+    for _ in range(8):
+        clock.advance(10.0)
+        eng.submit(PropagateRequest(y0, n_iters=2))
+        eng.flush()
+    clock.advance(10.0)
+    eng.submit(PropagateRequest(y0, n_iters=2))
+    assert eng._linger_window_s() == pytest.approx(0.050)
+    eng.flush()
+    # the chosen window is observable for operators
+    assert eng.metrics().linger_window_ms == pytest.approx(50.0)
+
+
+def test_adaptive_linger_capped_by_nearest_deadline(small_fitted_vdt):
+    """Under edf, lingering never extends past the most urgent deadline."""
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="edf", max_batch=8,
+                          max_wait_ms=100.0, clock=clock)
+    eng.submit(PropagateRequest(y0, n_iters=2, deadline_ms=20.0))
+    # cap (100ms) > deadline distance (20ms): the deadline wins
+    assert eng._linger_window_s() == pytest.approx(0.020)
+    clock.advance(0.015)
+    assert eng._linger_window_s() == pytest.approx(0.005)
+    eng.flush()
+
+
+def test_linger_shrinks_for_deadline_arriving_mid_window(
+        small_fitted_vdt, monkeypatch):
+    """A tight-deadline request landing DURING the linger must shrink the
+    window: the loop re-checks next_deadline() every iteration, so batching
+    can never itself expire the most urgent request."""
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="edf", max_batch=64,
+                          max_wait_ms=1000.0, clock=clock)
+    eng.submit(PropagateRequest(y0, n_iters=2))  # deadline-less opener
+    calls = []
+
+    def wait_and_arrive(n, timeout=None):
+        # stand-in for the real condition wait: every "wait" sees 5ms pass
+        # and one more arrival, so the quiesce early-exit never fires and
+        # the loop runs until its deadline bound stops it
+        calls.append(timeout)
+        clock.advance(0.005)
+        if len(calls) == 1:  # mid-linger: a 10ms-deadline request lands
+            eng.submit(PropagateRequest(y0, n_iters=2, deadline_ms=10.0))
+        else:
+            eng.submit(PropagateRequest(y0, n_iters=2))
+        return False
+
+    monkeypatch.setattr(eng._queue, "wait_atleast", wait_and_arrive)
+    eng._linger()
+    # the tight deadline (15ms absolute) must end the linger within a few
+    # 5ms waits; without the per-iteration re-check the loop would keep
+    # waiting toward the 1000ms cap (~60+ calls before max_batch fills)
+    assert len(calls) <= 4
+    eng.flush()
+
+
+def test_fixed_linger_opt_out(small_fitted_vdt):
+    """adaptive_linger=False restores the fixed max_wait_ms window."""
+    x, vdt = small_fitted_vdt
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    clock = FakeClock()
+    eng = PropagateEngine(vdt, start=False, max_wait_ms=30.0,
+                          adaptive_linger=False, clock=clock)
+    for _ in range(4):
+        clock.advance(0.001)
+        eng.submit(PropagateRequest(y0, n_iters=2))
+    assert eng._linger_window_s() == pytest.approx(0.030)
+    eng.flush()

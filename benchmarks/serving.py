@@ -22,6 +22,15 @@ to per-policy bounds in ``benchmarks/baselines.json``:
                      requests carry tight deadlines, under ``fifo`` vs
                      ``edf``.  EDF must actually meet deadlines:
                      ``edf.deadline_miss_rate`` is gated with a MAX bound.
+``preempt``          head-of-line blocking behind IN-FLIGHT work: bulk
+                     clients keep long scans (``BULK_ITERS`` iterations) on
+                     the device while tight-deadline arrivals land mid-scan,
+                     under ``edf`` monolithic vs ``edf`` +
+                     ``segment_iters``.  Preemptible dispatch must serve an
+                     urgent arrival at the next segment boundary instead of
+                     after the whole scan: ``preempt.p95_preempt_ms`` is
+                     gated with a MAX bound (the monolithic figures are
+                     recorded for comparison, not gated).
 
     PYTHONPATH=src python -m benchmarks.serving                  # all scenarios
     PYTHONPATH=src python -m benchmarks.serving --scenario mixed-priority
@@ -68,7 +77,18 @@ PIPELINE = 6
 HI_COUNT = 30 if TINY else 24
 TIGHT_DEADLINE_MS = 100.0 if TINY else 5000.0
 
-SCENARIOS = ("uniform", "bursty", "mixed-priority", "deadline-heavy")
+# preempt scenario: bulk scans long enough that an urgent deadline cannot
+# survive waiting one out (tiny N=256 runs ~0.2ms/iter, so 2000 iterations
+# keeps a scan several deadline-lengths long), segments short enough that
+# the urgent request easily survives one segment boundary
+BULK_ITERS = 2000 if TINY else 500
+SEGMENT_ITERS = 25
+URGENT_DEADLINE_MS = 100.0 if TINY else 5000.0
+URGENT_COUNT = 12 if TINY else 24
+BULK_CLIENTS = 2
+
+SCENARIOS = ("uniform", "bursty", "mixed-priority", "deadline-heavy",
+             "preempt")
 
 
 def make_requests(rng, count):
@@ -305,6 +325,84 @@ def scenario_deadline_heavy(vdt, rng) -> dict:
     return out
 
 
+# ----------------------------------------------------------------- preempt
+def scenario_preempt(vdt, rng) -> dict:
+    """Urgent-arrival latency against in-flight long scans, mono vs segmented.
+
+    ``BULK_CLIENTS`` closed-loop clients keep ``BULK_ITERS``-iteration
+    scans on the device back to back, so a tight-deadline foreground
+    request almost always lands MID-scan.  Under monolithic EDF dispatch
+    the arrival can only reorder the *queue* — it still waits out (and,
+    with a deadline shorter than a bulk scan, typically expires behind)
+    the in-flight work.  With ``segment_iters`` the engine re-checks the
+    queue every segment and yields, so the urgent request completes within
+    roughly one segment plus its own dispatch.  The gated figure is the
+    p95 of completed urgent-request latencies in the segmented run
+    (``p95_preempt_ms``); the monolithic run's completion/expiry split is
+    recorded alongside as the head-of-line-blocking baseline.
+    """
+    fg_seed = _qos_seed(rng)
+    bulk_seeds = [_qos_seed(rng) for _ in range(BULK_CLIENTS)]
+    out = {"bulk_iters": BULK_ITERS, "segment_iters": SEGMENT_ITERS,
+           "urgent_deadline_ms": URGENT_DEADLINE_MS}
+    for mode, seg in (("monolithic", None), ("preempt", SEGMENT_ITERS)):
+        latencies, expired = [], 0
+        with PropagateEngine(vdt, max_batch=QOS_MAX_BATCH, max_wait_ms=5.0,
+                             max_queue=64, policy="edf",
+                             segment_iters=seg) as eng:
+            eng.warmup(widths=(QOS_WIDTH,), n_iters=(LP_ITERS, BULK_ITERS))
+            stop = threading.Event()
+
+            def background(cid):
+                futs = deque()
+                while not stop.is_set():
+                    while len(futs) < 2:  # always one scan queued behind
+                        futs.append(eng.submit(PropagateRequest(
+                            bulk_seeds[cid], alpha=0.05,
+                            n_iters=BULK_ITERS)))
+                    futs.popleft().result(timeout=600)
+                while futs:
+                    futs.popleft().result(timeout=600)
+
+            threads = [threading.Thread(target=background, args=(i,))
+                       for i in range(BULK_CLIENTS)]
+            for t in threads:
+                t.start()
+            time.sleep(0.2)  # let a bulk scan get in flight first
+            for _ in range(URGENT_COUNT):
+                t0 = time.perf_counter()
+                try:
+                    eng.submit(PropagateRequest(
+                        fg_seed, alpha=0.05, n_iters=LP_ITERS,
+                        deadline_ms=URGENT_DEADLINE_MS)).result(timeout=600)
+                    latencies.append(time.perf_counter() - t0)
+                except DeadlineExceeded:
+                    expired += 1
+                time.sleep(0.02)  # spread arrivals across scan interiors
+            stop.set()
+            for t in threads:
+                t.join()
+            m = eng.metrics()
+        p95 = float(np.percentile(latencies, 95) * 1e3) \
+            if latencies else float("nan")
+        p50 = float(np.percentile(latencies, 50) * 1e3) \
+            if latencies else float("nan")
+        out[f"{mode}_p50_ms"] = p50
+        out[f"{mode}_p95_ms"] = p95
+        out[f"{mode}_completed"] = len(latencies)
+        out[f"{mode}_expired"] = expired
+        if mode == "preempt":
+            out["p95_preempt_ms"] = p95  # the gated figure
+            out["preemptions"] = m.preemptions
+            out["preempt_iters"] = m.preempt_iters
+        emit(f"serving/preempt/{mode}/n={N}/bulk={BULK_ITERS}",
+             p95 * 1e3 if latencies else float("nan"),
+             f"p50={p50:.0f}ms p95={p95:.0f}ms completed={len(latencies)} "
+             f"expired={expired}"
+             + (f" preemptions={m.preemptions}" if mode == "preempt" else ""))
+    return out
+
+
 # ---------------------------------------------------------------- top level
 def run(scenarios=SCENARIOS) -> dict:
     rng = np.random.RandomState(0)
@@ -326,6 +424,8 @@ def run(scenarios=SCENARIOS) -> dict:
         sections["mixed_priority"] = scenario_mixed_priority(vdt, rng)
     if "deadline-heavy" in scenarios:
         sections["edf"] = scenario_deadline_heavy(vdt, rng)
+    if "preempt" in scenarios:
+        sections["preempt"] = scenario_preempt(vdt, rng)
 
     # single-scenario runs keep the other sections of an existing artifact
     # so a targeted re-measure never knocks out the gate's other bounds —

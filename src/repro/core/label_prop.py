@@ -27,6 +27,18 @@ computed once per iteration for all B requests.  It backs
 ``VariationalDualTree.label_propagate(backend="exact")`` and the serving
 engine's ``backend="exact"`` mode (accuracy-validation traffic at sizes
 where dense P would not fit).
+
+Segmented scans (preemptible dispatch)
+--------------------------------------
+Both hot-path scans have ``*_resume`` twins that enter the recursion from a
+mid-walk carry instead of the seed, and ``*_segmented`` drivers that split
+``n_iters`` into ``segment_iters``-sized checkpointed segments.  Eq. 15 is
+a pure fixed-point iteration — ``Y^{t+1}`` depends only on ``(Y^t, Y^0,
+alpha)`` — so the split is *exact*: the carry re-enters the next segment
+and the composed walk is bit-identical to the monolithic scan.  The serving
+engine drives segments itself (re-checking its queue between them) so a
+tight-deadline arrival can preempt a long in-flight dispatch at the next
+segment boundary instead of waiting out the whole scan.
 """
 from __future__ import annotations
 
@@ -40,7 +52,9 @@ import numpy as np
 from repro.core.matvec import mpt_matvec_leaforder
 
 __all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
-           "lp_scan_fused", "route_backend", "AUTO_EXACT_MAX_N", "ccr"]
+           "lp_scan_leaforder_resume", "lp_scan_leaforder_segmented",
+           "lp_scan_fused", "lp_scan_fused_resume", "lp_scan_fused_segmented",
+           "route_backend", "AUTO_EXACT_MAX_N", "ccr"]
 
 # `backend="auto"` routes to the exact eq.-3 scan at or below this many
 # points: one exact LP iteration is O(N^2 d) streamed, which at this scale
@@ -127,6 +141,77 @@ def lp_scan_leaforder(
     return y
 
 
+@functools.partial(jax.jit, static_argnames=("L",))
+def lp_scan_leaforder_resume(
+    y_leaf: jax.Array,       # (Np, K) mid-walk carry in leaf order
+    y0_leaf: jax.Array,      # (Np, K) seed labels (the eq.-15 restart term)
+    leaf_mask: jax.Array,    # (Np, 1) 1.0 at real leaves, 0.0 at ghosts
+    a: jax.Array,
+    b: jax.Array,
+    q: jax.Array,
+    alpha: jax.Array,
+    L: int,
+    n_iters,
+) -> jax.Array:
+    """``n_iters`` eq.-15 steps entered from a mid-walk carry ``y_leaf``.
+
+    The segmented-dispatch primitive behind :func:`lp_scan_leaforder`: the
+    per-iteration body is identical, only the loop init differs, so
+    resuming from the carry of an earlier scan continues the monolithic
+    walk bit-identically (``lp_scan_leaforder(y0, ...)`` is the
+    ``y_leaf == y0_leaf`` special case).  Ghost rows of the carry are zero
+    by the re-masking invariant, so a carry round-tripped through row order
+    between segments re-enters unchanged.
+
+    ``n_iters`` is *traced* — a dynamic ``fori_loop`` bound — so all
+    segment lengths share ONE compiled executable per ``(shape, L)``: odd
+    remainder segments never stall a serving dispatch on a fresh compile,
+    and XLA can never constant-fold a short tail into a differently-fused
+    inline body (which is what breaks length-1 bit-parity on the fused
+    path; see ``kernels/fused_lp/batched.py``).
+    """
+
+    def body(_, y):
+        return leaf_mask * (alpha * mpt_matvec_leaforder(y, a, b, q, L)) \
+            + (1.0 - alpha) * y0_leaf
+
+    return jax.lax.fori_loop(0, n_iters, body, y_leaf)
+
+
+def lp_scan_leaforder_segmented(
+    y0_leaf: jax.Array,
+    leaf_mask: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    q: jax.Array,
+    alpha: jax.Array,
+    L: int,
+    n_iters: int,
+    segment_iters: int,
+) -> jax.Array:
+    """Eq. 15 as ``ceil(n_iters / segment_iters)`` checkpointed segments.
+
+    Bit-identical to ``lp_scan_leaforder(..., n_iters)`` — the carry of
+    each segment re-enters the next via :func:`lp_scan_leaforder_resume` —
+    while syncing at every segment boundary.  The parity reference for the
+    engine's preemptible dispatch (which drives the same resume primitive
+    but interleaves queue checks between segments).
+    """
+    if segment_iters < 1:
+        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
+    if segment_iters >= n_iters:
+        # one segment covers the walk: run the monolithic scan directly
+        return lp_scan_leaforder(y0_leaf, leaf_mask, a, b, q, alpha, L,
+                                 int(n_iters))
+    y, done = y0_leaf, 0
+    while done < n_iters:
+        k = min(int(segment_iters), int(n_iters) - done)
+        y = lp_scan_leaforder_resume(y, y0_leaf, leaf_mask, a, b, q, alpha,
+                                     L, k)
+        done += k
+    return y
+
+
 def lp_scan_fused(
     x: jax.Array,            # (N, d) points
     y0: jax.Array,           # (N,), (N, C) or (batch, N, C) seed labels
@@ -181,6 +266,90 @@ def lp_scan_fused(
                                int(n_iters), block_m=block_m, block_n=block_n,
                                divergence=divergence)
     return out[:, 0] if squeeze else out
+
+
+def lp_scan_fused_resume(
+    x: jax.Array,            # (N, d) points
+    y: jax.Array,            # carry, same shape family as ``y0``
+    y0: jax.Array,           # (N,), (N, C) or (batch, N, C) seed labels
+    sigma: float,
+    alpha=0.01,
+    n_iters: int = 500,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    divergence=None,
+) -> jax.Array:
+    """``n_iters`` exact eq.-15 steps entered from a mid-walk carry ``y``.
+
+    The exact-backend segmented-dispatch primitive: same shape/alpha/static
+    handling as :func:`lp_scan_fused` (which is the ``y == y0`` special
+    case), but the streamed scan starts from the carry of an earlier
+    segment, continuing the monolithic walk bit-identically.
+    """
+    from repro.core.divergence import resolve_divergence
+    from repro.kernels.fused_lp import (fused_lp_scan_batched_resume,
+                                        fused_lp_scan_folded_resume)
+
+    divergence = resolve_divergence(divergence)
+    y0 = jnp.asarray(y0)
+    if not jnp.issubdtype(y0.dtype, jnp.floating):
+        y0 = y0.astype(jnp.float32)
+    y = jnp.asarray(y, y0.dtype)
+    if y.shape != y0.shape:
+        raise ValueError(
+            f"carry shape {y.shape} must match seed shape {y0.shape}")
+    sigma = float(sigma)
+    if y0.ndim == 3:
+        batch = y0.shape[0]
+        alpha = jnp.asarray(alpha, jnp.float32)
+        if alpha.ndim == 1 and alpha.shape[0] != batch:
+            raise ValueError(
+                f"per-request alpha wants shape ({batch},), got {alpha.shape}")
+        return fused_lp_scan_batched_resume(
+            x, y, y0, sigma, alpha, int(n_iters),
+            block_m=block_m, block_n=block_n, divergence=divergence)
+    squeeze = y0.ndim == 1
+    if squeeze:
+        y, y0 = y[:, None], y0[:, None]
+    out = fused_lp_scan_folded_resume(
+        x, y, y0, sigma, jnp.asarray(alpha, jnp.float32), int(n_iters),
+        block_m=block_m, block_n=block_n, divergence=divergence)
+    return out[:, 0] if squeeze else out
+
+
+def lp_scan_fused_segmented(
+    x: jax.Array,
+    y0: jax.Array,
+    sigma: float,
+    alpha=0.01,
+    n_iters: int = 500,
+    *,
+    segment_iters: int,
+    block_m: int = 256,
+    block_n: int = 256,
+    divergence=None,
+) -> jax.Array:
+    """Exact eq.-15 walk as checkpointed ``segment_iters``-sized segments.
+
+    Bit-identical to ``lp_scan_fused(..., n_iters)``; see
+    :func:`lp_scan_leaforder_segmented` for the contract.
+    """
+    if segment_iters < 1:
+        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
+    if segment_iters >= n_iters:
+        # one segment covers the walk: run the monolithic scan directly
+        return lp_scan_fused(x, y0, sigma, alpha, int(n_iters),
+                             block_m=block_m, block_n=block_n,
+                             divergence=divergence)
+    y, done = y0, 0
+    while done < n_iters:
+        k = min(int(segment_iters), int(n_iters) - done)
+        y = lp_scan_fused_resume(x, y, y0, sigma, alpha, k,
+                                 block_m=block_m, block_n=block_n,
+                                 divergence=divergence)
+        done += k
+    return y
 
 
 @functools.partial(jax.jit, static_argnames=())

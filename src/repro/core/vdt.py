@@ -26,7 +26,8 @@ from repro.core import matvec as matvec_mod
 from repro.core import qopt as qopt_mod
 from repro.core import refine as refine_mod
 from repro.core import sigma as sigma_mod
-from repro.core.label_prop import lp_scan_fused, lp_scan_leaforder
+from repro.core.label_prop import (lp_scan_fused, lp_scan_fused_resume,
+                                   lp_scan_leaforder, lp_scan_leaforder_resume)
 from repro.core.tree import PartitionTree, build_tree
 
 __all__ = ["VariationalDualTree", "VdtStats"]
@@ -271,6 +272,78 @@ class VariationalDualTree:
         y_leaf = y_leaf.at[tree.slot_of].set(y0)
         out_leaf = lp_scan_leaforder(
             y_leaf, mask, a, b, q, jnp.asarray(alpha, y0.dtype),
+            tree.L, int(n_iters),
+        )
+        out = out_leaf[tree.slot_of]
+        return out[:, 0] if squeeze else out
+
+    def label_propagate_resume(self, y, y0, alpha=0.01, n_iters: int = 500,
+                               batched: Optional[bool] = None,
+                               backend: str = "vdt"):
+        """Continue an eq.-15 walk for ``n_iters`` more steps from carry ``y``.
+
+        The segmented-dispatch counterpart of :meth:`label_propagate`: ``y``
+        is the output of an earlier (shorter) propagation from the same seed
+        ``y0``, and the continued walk is *bit-identical* to having run the
+        combined iteration count monolithically — eq. 15 is a pure
+        fixed-point iteration, so the split is exact (see
+        ``core.label_prop.lp_scan_leaforder_resume`` /
+        ``lp_scan_fused_resume``).  The serving engine calls this once per
+        checkpointed segment, re-checking its queue between calls so a
+        tight-deadline arrival can preempt a long in-flight dispatch.
+
+        Shapes, ``alpha`` semantics, and ``backend`` match
+        :meth:`label_propagate`; ``y`` must have ``y0``'s exact shape.
+        """
+        y0 = jnp.asarray(y0)
+        if not jnp.issubdtype(y0.dtype, jnp.floating):
+            y0 = y0.astype(jnp.float32)
+        y = jnp.asarray(y, y0.dtype)
+        if y.shape != y0.shape:
+            raise ValueError(
+                f"carry shape {y.shape} must match seed shape {y0.shape}")
+        if backend not in ("vdt", "exact"):
+            raise ValueError(
+                f"backend must be 'vdt' or 'exact', got {backend!r}")
+        if backend == "exact":
+            if batched and y0.ndim != 3:
+                raise ValueError(
+                    f"batched label_propagate wants (batch, N, C), got {y0.shape}")
+            return lp_scan_fused_resume(
+                self.x_rows, y, y0, float(self.sigma), alpha, int(n_iters),
+                divergence=self.bound_divergence.div)
+        if batched is None:
+            batched = y0.ndim == 3
+        if batched:
+            if y0.ndim != 3:
+                raise ValueError(
+                    f"batched label_propagate wants (batch, N, C), got {y0.shape}")
+            batch, _, c = y0.shape
+            alpha = jnp.asarray(alpha, y0.dtype)
+            if alpha.ndim == 1:
+                if alpha.shape[0] != batch:
+                    raise ValueError(
+                        f"per-request alpha wants shape ({batch},), got {alpha.shape}")
+                alpha = jnp.repeat(alpha, c)
+            out = self.label_propagate_resume(
+                matvec_mod.fold_batch(y), matvec_mod.fold_batch(y0),
+                alpha=alpha, n_iters=n_iters, batched=False)
+            return matvec_mod.unfold_batch(out, batch, c)
+
+        squeeze = y0.ndim == 1
+        if squeeze:
+            y, y0 = y[:, None], y0[:, None]
+        tree = self.tree
+        a, b, _, q, mask = self._dispatch_buffers()
+        # ghost slots are zero both in the seed and (by the re-masking
+        # invariant) in any mid-walk carry, so scattering the row-order
+        # carry into zeros reproduces the in-scan leaf state exactly
+        y0_leaf = jnp.zeros((tree.n_leaves, y0.shape[1]), y0.dtype)
+        y0_leaf = y0_leaf.at[tree.slot_of].set(y0)
+        y_leaf = jnp.zeros((tree.n_leaves, y0.shape[1]), y0.dtype)
+        y_leaf = y_leaf.at[tree.slot_of].set(y)
+        out_leaf = lp_scan_leaforder_resume(
+            y_leaf, y0_leaf, mask, a, b, q, jnp.asarray(alpha, y0.dtype),
             tree.L, int(n_iters),
         )
         out = out_leaf[tree.slot_of]

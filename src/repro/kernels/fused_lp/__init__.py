@@ -1,7 +1,9 @@
 from repro.kernels.fused_lp.ops import (fused_lp_matvec,
                                         fused_lp_matvec_batched,
                                         fused_lp_scan_batched,
+                                        fused_lp_scan_batched_resume,
                                         fused_lp_scan_folded,
+                                        fused_lp_scan_folded_resume,
                                         fused_lp_step_batched,
                                         fused_lp_step_folded)
 from repro.kernels.fused_lp.ref import (dense_transition_ref,
@@ -14,6 +16,7 @@ from repro.kernels.fused_lp.ref import (dense_transition_ref,
 __all__ = ["fused_lp_matvec", "fused_lp_matvec_batched",
            "fused_lp_step_batched", "fused_lp_step_folded",
            "fused_lp_scan_folded", "fused_lp_scan_batched",
+           "fused_lp_scan_folded_resume", "fused_lp_scan_batched_resume",
            "fused_lp_matvec_ref", "fused_lp_matvec_dense_ref",
            "fused_lp_matvec_batched_ref", "fused_lp_step_batched_ref",
            "fused_lp_scan_batched_ref", "dense_transition_ref"]

@@ -68,7 +68,9 @@ __all__ = [
     "fused_lp_step_folded_kernel",
     "fused_lp_step_batched_reuse_kernel",
     "fused_lp_scan_folded_kernel",
+    "fused_lp_scan_folded_resume_kernel",
     "fused_lp_scan_batched_reuse_kernel",
+    "fused_lp_scan_batched_resume_kernel",
 ]
 
 
@@ -281,6 +283,59 @@ def fused_lp_step_batched_reuse_kernel(
 
 
 # ------------------------------------------------------ multi-iteration scan
+def fused_lp_scan_folded_resume_kernel(
+    x: jax.Array,          # (N, d)
+    y: jax.Array,          # (N, K) folded carry: the walk state entering
+    y0: jax.Array,         # (N, K) folded seed labels (eq.-15 restart term)
+    sigma: float,
+    alpha,                 # traced scalar or (K,)
+    n_iters,               # TRACED segment length (or concrete int)
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+    divergence=None,
+) -> jax.Array:
+    """``n_iters`` fused eq.-15 steps entered from a mid-walk carry ``y``.
+
+    The segmented-dispatch primitive: eq. 15 is a pure fixed-point
+    iteration, so running ``n_iters`` steps from the carry of an earlier
+    scan continues the monolithic walk *bit-identically* — the per-step
+    body is the same program, only the init differs.  ``n_iters`` is a
+    *dynamic* ``fori_loop`` bound, deliberately: a static length-1 tail
+    segment would let XLA inline the single trip and fuse its epilogue
+    differently (observed 1-ulp drift), and every distinct static segment
+    length would compile its own executable.  A dynamic bound keeps one
+    while-loop executable per shape whose body is the very program the
+    monolithic ``lax.scan`` runs, whatever the segment split.
+
+    Rows past ``n`` hold epilogue garbage mid-scan, but the column mask
+    (``col >= n_valid``) keeps padding out of every accumulation, so a
+    carry re-padded with zeros between segments changes nothing in the
+    valid region; the final slice drops pad rows.
+    """
+    tile_fn, pad, transform = tile_config(divergence)
+    if transform is not None:
+        x = transform(x)
+    n, _ = x.shape
+    k = y0.shape[1]
+    tile = math.lcm(block_m, block_n)
+    sp = -(-n // tile) * tile
+    xp = jnp.pad(x, ((0, sp - n), (0, 0)), constant_values=pad)
+    yp = jnp.pad(y, ((0, sp - n), (0, 0)))
+    y0p = jnp.pad(y0, ((0, sp - n), (0, 0)))
+    al = _alpha_row(alpha, k)
+    inv = float(1.0 / (2.0 * sigma * sigma))
+
+    def body(_, yc):
+        return _folded_call(xp, xp, yc, y0p, al, inv_two_sigma_sq=inv,
+                            n_valid=n, block_m=block_m, block_n=block_n,
+                            interpret=interpret, tile_fn=tile_fn)
+
+    yc = jax.lax.fori_loop(0, n_iters, body, yp)
+    return yc[:n]
+
+
 def fused_lp_scan_folded_kernel(
     x: jax.Array,          # (N, d)
     y0: jax.Array,         # (N, K) folded seed labels
@@ -343,6 +398,32 @@ def fused_lp_scan_batched_reuse_kernel(
         alpha = jnp.repeat(alpha, c)
     out = fused_lp_scan_folded_kernel(
         x, fold_batch(y0), sigma, alpha, n_iters,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+        divergence=divergence,
+    )
+    return unfold_batch(out, batch, c)
+
+
+def fused_lp_scan_batched_resume_kernel(
+    x: jax.Array,          # (N, d)
+    y: jax.Array,          # (B, N, C) stacked mid-walk carries
+    y0: jax.Array,         # (B, N, C) stacked seed labels
+    sigma: float,
+    alpha,                 # traced scalar or (B,)
+    n_iters: int,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+    divergence=None,
+) -> jax.Array:
+    """Batched LP segment from a carry: fold both operands, resume, unfold."""
+    batch, _, c = y0.shape
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if alpha.ndim == 1:
+        alpha = jnp.repeat(alpha, c)
+    out = fused_lp_scan_folded_resume_kernel(
+        x, fold_batch(y), fold_batch(y0), sigma, alpha, n_iters,
         block_m=block_m, block_n=block_n, interpret=interpret,
         divergence=divergence,
     )

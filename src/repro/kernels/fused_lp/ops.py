@@ -37,8 +37,10 @@ import functools
 import jax
 
 from repro.kernels.fused_lp.batched import (
+    fused_lp_scan_batched_resume_kernel,
     fused_lp_scan_batched_reuse_kernel,
     fused_lp_scan_folded_kernel,
+    fused_lp_scan_folded_resume_kernel,
     fused_lp_step_batched_kernel,
     fused_lp_step_batched_reuse_kernel,
     fused_lp_step_folded_kernel,
@@ -47,7 +49,8 @@ from repro.kernels.fused_lp.fused_lp import fused_lp_matvec_kernel
 
 __all__ = ["fused_lp_matvec", "fused_lp_matvec_batched",
            "fused_lp_step_batched", "fused_lp_step_folded",
-           "fused_lp_scan_folded", "fused_lp_scan_batched"]
+           "fused_lp_scan_folded", "fused_lp_scan_batched",
+           "fused_lp_scan_folded_resume", "fused_lp_scan_batched_resume"]
 
 
 def _interpret() -> bool:
@@ -201,3 +204,51 @@ def fused_lp_scan_batched(x, y0s, sigma: float, alpha, n_iters: int,
     return _scan_batched_impl(x, y0s, sigma, alpha, int(n_iters),
                               block_m=block_m, block_n=block_n,
                               divergence=_static_div(divergence))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "block_m", "block_n",
+                                    "divergence"))
+def _scan_folded_resume_impl(x, y, y0, sigma: float, alpha, n_iters,
+                             block_m: int, block_n: int, divergence):
+    return fused_lp_scan_folded_resume_kernel(
+        x, y, y0, sigma, alpha, n_iters, block_m=block_m,
+        block_n=block_n, interpret=_interpret(), divergence=divergence)
+
+
+def fused_lp_scan_folded_resume(x, y, y0, sigma: float, alpha, n_iters: int,
+                                block_m: int = 256, block_n: int = 256,
+                                divergence=None):
+    """``n_iters`` folded eq.-15 steps entered from a mid-walk carry ``y``.
+
+    The segmented-dispatch primitive: bit-identical continuation of the
+    monolithic scan (eq. 15 is a pure fixed-point iteration), so a long
+    walk can be split into preemptible segments whose carries re-enter here.
+    ``n_iters`` is *traced* (dynamic ``fori_loop`` bound): every segment
+    length — including odd remainders — reuses one compiled executable per
+    shape, and a length-1 tail can never be constant-folded into a
+    differently-fused (1-ulp-off) inline body.
+    """
+    return _scan_folded_resume_impl(x, y, y0, sigma, alpha, int(n_iters),
+                                    block_m=block_m, block_n=block_n,
+                                    divergence=_static_div(divergence))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "block_m", "block_n",
+                                    "divergence"))
+def _scan_batched_resume_impl(x, ys, y0s, sigma: float, alpha, n_iters,
+                              block_m: int, block_n: int, divergence):
+    return fused_lp_scan_batched_resume_kernel(
+        x, ys, y0s, sigma, alpha, n_iters,
+        block_m=block_m, block_n=block_n, interpret=_interpret(),
+        divergence=divergence)
+
+
+def fused_lp_scan_batched_resume(x, ys, y0s, sigma: float, alpha,
+                                 n_iters: int, block_m: int = 256,
+                                 block_n: int = 256, divergence=None):
+    """Batched LP segment over a (B, N, C) carry stack (see folded resume)."""
+    return _scan_batched_resume_impl(x, ys, y0s, sigma, alpha, int(n_iters),
+                                     block_m=block_m, block_n=block_n,
+                                     divergence=_static_div(divergence))

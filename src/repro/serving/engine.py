@@ -61,6 +61,29 @@ request.  The engine-level ``backend`` is only the *default*: each
 accuracy-validation traffic, ``"auto"`` for route-by-size), making one
 engine an exact/VDT hybrid.
 
+Preemptible dispatch
+--------------------
+Without it, EDF only reorders the *queue*: a deadline-100ms request
+arriving one segment into a 500-iteration bulk scan still waits out the
+whole scan — head-of-line blocking behind in-flight work — and fast-fails
+on expiry despite the device having had plenty of boundary opportunities
+to serve it.  ``segment_iters=k`` (with ``policy="edf"``) fixes this:
+scans longer than ``k`` run as resumable ``k``-iteration segments
+(``VariationalDualTree.label_propagate_resume``; bit-identical to the
+monolithic scan, since eq. 15 is a pure fixed-point iteration and the
+carry plus the seed is the walk's complete state).  Between segments the
+scheduler re-checks the queue: if any queued deadline falls before ``now +
+est_iter_time * iters_remaining`` (per-iteration EWMA of measured segment
+times), the walk yields — urgent entries drain (deadline-ordered prefix of
+the EDF heap, everything else stays queued) and dispatch *now*,
+non-preemptibly, then the suspended scan resumes from its carry.  Worst-
+case added latency for an urgent arrival drops from ``O(n_iters)`` to one
+segment: ``preempt_latency <= segment_iters * iter_time + urgent dispatch
+cost``.  ``metrics()`` exposes ``preemptions`` (boundary yields) and
+``preempt_iters`` (iterations still pending at those yields); the
+``preempt`` benchmark scenario measures the p95 urgent-arrival latency
+under exactly this contention and the bench gate caps it.
+
 Compile-cache bound
 -------------------
 Jitted executables are keyed by ``(n_iters, N, batch bucket * width
@@ -95,12 +118,15 @@ the background thread (``start=True``) or the caller of ``step``/``flush``
 """
 from __future__ import annotations
 
+import dataclasses
+import logging
 import threading
 import time
 from concurrent.futures import Future
 from typing import Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.label_prop import route_backend
@@ -114,12 +140,39 @@ __all__ = ["PropagateEngine", "QueueFull", "DeadlineExceeded",
            "PropagateRequest"]
 
 
+_log = logging.getLogger(__name__)
+
+
 def _batch_bucket(n: int, cap: int) -> int:
     """Next power of two >= n, capped at the configured max batch."""
     b = 1
     while b < n:
         b <<= 1
     return min(b, cap)
+
+
+@dataclasses.dataclass
+class _InFlightScan:
+    """A segmented group dispatch suspended (or running) mid-walk.
+
+    The resumable in-flight record behind preemptible dispatch: eq. 15 is
+    a pure fixed-point iteration, so ``carry`` after ``iters_done`` steps
+    plus the seed ``y0`` is the COMPLETE state of the walk — resuming from
+    it (``VariationalDualTree.label_propagate_resume``) is bit-identical
+    to never having paused.  The engine holds one of these per segmented
+    group; between segments it re-checks the queue and, if an urgent
+    arrival's deadline would expire before the remaining
+    ``n_iters - iters_done`` iterations complete, yields the device to an
+    urgent dispatch before resuming.
+    """
+
+    entries: list  # the group's QueueEntry list, batch-slot order
+    carry: object  # (bb, N, cb) device array: the walk state so far
+    y0: object  # (bb, N, cb) device array: seed labels (eq.-15 restart term)
+    alphas: object  # (bb,) per-request alpha (padding rows: 0)
+    n_iters: int
+    backend: str
+    iters_done: int = 0
 
 
 class PropagateEngine:
@@ -156,6 +209,13 @@ class PropagateEngine:
     adaptive_linger: scale the batching window by the observed arrival
                  rate (EWMA of inter-arrival gaps) instead of always
                  lingering toward ``max_wait_ms``.
+    segment_iters: preemptible dispatch — split every LP scan longer than
+                 this into ``segment_iters``-sized resumable segments and
+                 re-check the queue at each boundary (see *Preemptible
+                 dispatch* in the module docstring).  ``None`` (default)
+                 dispatches monolithically.  Only effective under
+                 ``policy="edf"``: the other disciplines carry no deadline
+                 signal, so there is nothing to preempt for.
     clock:       monotonic time source (seconds).  Injectable so the
                  scheduler's timing decisions — linger windows, aging
                  ranks, deadline expiry, latency metrics — are
@@ -179,6 +239,7 @@ class PropagateEngine:
         policy: str = "fifo",
         aging_ms: float = 500.0,
         adaptive_linger: bool = True,
+        segment_iters: Optional[int] = None,
         clock: Callable[[], float] = time.perf_counter,
         start: bool = True,
     ):
@@ -187,6 +248,9 @@ class PropagateEngine:
         if policy not in DISCIPLINES:
             raise ValueError(
                 f"policy must be one of {DISCIPLINES}, got {policy!r}")
+        if segment_iters is not None and segment_iters < 1:
+            raise ValueError(
+                f"segment_iters must be >= 1 or None, got {segment_iters}")
         self.vdt = vdt
         self.n = int(vdt.tree.n_points)
         # the engine-level backend is the per-request DEFAULT; "auto"
@@ -213,10 +277,15 @@ class PropagateEngine:
         self._metrics = EngineMetrics()
         self._seq = 0
         self._in_flight = 0
+        self.segment_iters = None if segment_iters is None else int(segment_iters)
         # arrival-rate estimate feeding the adaptive linger window
         self._ewma_gap_s: Optional[float] = None
         self._last_arrival: Optional[float] = None
         self._linger_window_ms = float("nan")
+        # per-LP-iteration device-time estimate (EWMA over completed
+        # segments), feeding the preempt horizon: "would anything queued
+        # expire before the remaining iterations finish?"
+        self._ewma_iter_s: Optional[float] = None
         self._state_lock = threading.Lock()
         self._stop = threading.Event()
         self._closed = False
@@ -245,7 +314,10 @@ class PropagateEngine:
         hybrid deployment that tags requests onto the other backend should
         pass e.g. ``backends=("vdt", "exact")``.  Returns the number of
         executables warmed.  Alpha is a traced argument, so no alpha values
-        need covering.
+        need covering.  When preemptible dispatch is on, the *resume*
+        executable is warmed too — its iteration count is a dynamic loop
+        bound, so ONE warm call per shape covers every segment length the
+        scheduler can ever slice.
         """
         cbs = sorted(set(bucket_width(int(w), self.buckets)
                          for w in (widths or self.buckets)))
@@ -261,12 +333,19 @@ class PropagateEngine:
             for ni in n_iters:
                 for cb in cbs:
                     for bb in bbs:
+                        z = np.zeros((bb, self.n, cb), np.float32)
                         out = self.vdt.label_propagate(
-                            np.zeros((bb, self.n, cb), np.float32),
-                            alpha=np.zeros((bb,), np.float32),
+                            z, alpha=np.zeros((bb,), np.float32),
                             n_iters=int(ni), batched=True, backend=be)
                         jax.block_until_ready(out)
                         count += 1
+                        if (self.segment_iters is not None
+                                and int(ni) > self.segment_iters):
+                            out = self.vdt.label_propagate_resume(
+                                z, z, alpha=np.zeros((bb,), np.float32),
+                                n_iters=1, batched=True, backend=be)
+                            jax.block_until_ready(out)
+                            count += 1
         return count
 
     # ------------------------------------------------------------ submission
@@ -376,9 +455,25 @@ class PropagateEngine:
                 self._in_flight -= len(live)
 
     def flush(self) -> int:
-        """Step until the queue is empty; returns total futures resolved."""
+        """Drain the backlog *as of this call*; returns futures resolved.
+
+        Deliberately NOT "step until empty": under concurrent producers a
+        length-polling loop never terminates as long as arrivals keep pace
+        with service (livelock — the flusher, e.g. ``shutdown(wait=True)``,
+        would be held hostage by other threads' traffic).  Instead the
+        backlog size and the queue's monotone pop counter are snapshotted
+        once, and stepping stops as soon as that many entries have been
+        popped — everything queued when ``flush`` was called is served,
+        while entries racing in afterwards wait for the next scheduler
+        pass.
+        """
+        backlog = len(self._queue)
+        if backlog == 0:
+            return 0
+        start_popped = self._queue.popped
         total = 0
-        while len(self._queue) > 0:
+        while (self._queue.popped - start_popped < backlog
+               and len(self._queue) > 0):
             total += self.step()
         return total
 
@@ -409,7 +504,10 @@ class PropagateEngine:
         nearest = self._queue.next_deadline()
         if nearest is not None:
             window = min(window, max(0.0, nearest - self._clock()))
-        self._linger_window_ms = window * 1e3
+        with self._state_lock:
+            # under the lock: metrics() reads this gauge from other threads,
+            # and an unsynchronized write can tear the snapshot
+            self._linger_window_ms = window * 1e3
         return window
 
     def _linger(self) -> None:
@@ -447,12 +545,24 @@ class PropagateEngine:
                 self.step()
             except Exception:  # never let the scheduler thread die silently
                 # per-group errors were already delivered via set_exception;
-                # anything reaching here is scheduler-internal — back off a
-                # beat so a persistent fault can't busy-spin the thread
+                # anything reaching here is scheduler-internal.  Count it
+                # and log the traceback — a silently swallowed fault looks
+                # exactly like a healthy idle engine from the outside —
+                # then back off a beat so a persistent fault can't
+                # busy-spin the thread
+                self._metrics.count("scheduler_errors")
+                _log.exception("scheduler iteration failed; backing off")
                 self._stop.wait(0.05)
 
-    def _dispatch(self, entries: list[QueueEntry]) -> int:
-        """Group, pad, and serve one drained microbatch."""
+    def _dispatch(self, entries: list[QueueEntry],
+                  preemptible: bool = True) -> int:
+        """Group, pad, and serve one drained microbatch.
+
+        ``preemptible=False`` forces monolithic scans — the urgent
+        service pass dispatches with it so a preemption can never nest
+        inside another preemption (unbounded recursion while the original
+        suspended walk starves).
+        """
         # group by (n_iters, backend) (+ width bucket unless coalescing):
         # only requests sharing a scan length AND a transition matrix can
         # share a dispatch.  Backends were resolved at submit, so None /
@@ -475,6 +585,7 @@ class PropagateEngine:
                 cb = max(bucket_width(e.request.y0.shape[1], self.buckets)
                          for e in group)
             group.sort(key=lambda e: e.seq)  # deterministic batch layout
+            urgent_resolved = 0
             try:
                 bb = _batch_bucket(len(group), self.max_batch)
                 stack = self._staging.setdefault(
@@ -485,16 +596,15 @@ class PropagateEngine:
                     y0 = entry.request.y0
                     stack[k, :, :y0.shape[1]] = y0
                     alphas[k] = entry.request.alpha
-                out = self.vdt.label_propagate(
-                    stack, alpha=alphas, n_iters=n_iters, batched=True,
-                    backend=backend)
-                jax.block_until_ready(out)
+                out, urgent_resolved = self._propagate_group(
+                    group, stack, alphas, n_iters, backend, preemptible)
             except Exception as exc:  # resolve the group, keep scheduling
                 for entry in group:
                     entry.future.set_exception(exc)
                 self._metrics.count("failed", len(group))
-                resolved += len(group)
+                resolved += len(group) + urgent_resolved
                 continue
+            resolved += urgent_resolved
             self._metrics.record_dispatch(len(group))
             t_done = self._clock()
             for k, entry in enumerate(group):
@@ -509,14 +619,118 @@ class PropagateEngine:
             resolved += len(group)
         return resolved
 
+    def _propagate_group(self, group: list[QueueEntry], stack: np.ndarray,
+                         alphas: np.ndarray, n_iters: int, backend: str,
+                         preemptible: bool):
+        """Run one group's LP walk, segmented and preemptible when enabled.
+
+        Returns ``(out, urgent_resolved)`` where ``out`` is the group's
+        final ``(bb, N, cb)`` label stack and ``urgent_resolved`` counts
+        futures resolved by urgent service passes taken at segment
+        boundaries (0 on the monolithic path).
+
+        The walk is segmented only when it is worth anything: preemption
+        enabled (``segment_iters``), the EDF discipline (the only one with
+        an urgency signal), the scan actually longer than one segment, and
+        an outer (non-nested) dispatch.  Each segment resumes from the
+        previous carry via ``label_propagate_resume`` — bit-identical to
+        the monolithic scan (eq. 15 is a pure fixed-point iteration; the
+        resume primitives take the iteration count as a *dynamic* loop
+        bound, so all segment lengths share one compiled executable per
+        shape).  After each segment the measured per-iteration device time
+        feeds an EWMA, and if anything queued would expire before the
+        estimated completion of the remaining iterations, the walk yields
+        the device to :meth:`_service_urgent` before resuming.
+        """
+        seg = self.segment_iters
+        if (not preemptible or seg is None or self.policy != "edf"
+                or int(n_iters) <= seg):
+            out = self.vdt.label_propagate(
+                stack, alpha=alphas, n_iters=n_iters, batched=True,
+                backend=backend)
+            jax.block_until_ready(out)
+            return out, 0
+        # device-resident seed: urgent dispatches between segments refill
+        # the SAME staging buffers, so the suspended walk's restart term
+        # must not alias the staging pool
+        y0_dev = jnp.asarray(stack)
+        alphas_dev = jnp.asarray(alphas)
+        rec = _InFlightScan(entries=group, carry=y0_dev, y0=y0_dev,
+                            alphas=alphas_dev, n_iters=int(n_iters),
+                            backend=backend)
+        urgent_resolved = 0
+        while rec.iters_done < rec.n_iters:
+            k = min(seg, rec.n_iters - rec.iters_done)
+            t0 = self._clock()
+            rec.carry = self.vdt.label_propagate_resume(
+                rec.carry, rec.y0, alpha=rec.alphas, n_iters=k,
+                batched=True, backend=rec.backend)
+            jax.block_until_ready(rec.carry)
+            dt = max(self._clock() - t0, 0.0)
+            rec.iters_done += k
+            with self._state_lock:
+                per_iter = dt / k
+                if self._ewma_iter_s is None:
+                    self._ewma_iter_s = per_iter
+                else:
+                    self._ewma_iter_s += 0.25 * (per_iter - self._ewma_iter_s)
+                est_iter_s = self._ewma_iter_s
+            remaining = rec.n_iters - rec.iters_done
+            if remaining <= 0:
+                break
+            horizon = self._clock() + est_iter_s * remaining
+            if self._queue.deadline_before(horizon):
+                # segment-boundary yield: an arrival's deadline would
+                # expire before the in-flight walk completes — serve it
+                # now, then resume from the carry bit-identically
+                self._metrics.count("preemptions")
+                self._metrics.count("preempt_iters", remaining)
+                urgent_resolved += self._service_urgent(horizon)
+        return rec.carry, urgent_resolved
+
+    def _service_urgent(self, horizon: float) -> int:
+        """Serve queued entries whose deadline falls before ``horizon``.
+
+        The preemption service pass: pops ONLY urgent entries (the EDF
+        heap is deadline-ordered, so this is a prefix drain) and
+        dispatches them with ``preemptible=False`` — the suspended walk is
+        already waiting, and a nested preemption could starve it without
+        bound.  Cancelled/expired entries popped on the way resolve
+        exactly as in :meth:`step`.
+        """
+        live, cancelled, expired = self._queue.drain_urgent(
+            self.max_batch, horizon)
+        if cancelled:
+            self._metrics.count("cancelled", len(cancelled))
+        resolved = 0
+        for entry in expired:
+            if entry.future.set_running_or_notify_cancel():
+                entry.future.set_exception(DeadlineExceeded(
+                    f"deadline_ms={entry.request.deadline_ms} expired "
+                    f"before dispatch"))
+                self._metrics.count("expired")
+                resolved += 1
+            else:
+                self._metrics.count("cancelled")
+        if not live:
+            return resolved
+        with self._state_lock:
+            self._in_flight += len(live)
+        try:
+            return resolved + self._dispatch(live, preemptible=False)
+        finally:
+            with self._state_lock:
+                self._in_flight -= len(live)
+
     # ----------------------------------------------------------- lifecycle
     def metrics(self) -> MetricsSnapshot:
         with self._state_lock:
             in_flight = self._in_flight
+            linger_window_ms = self._linger_window_ms
         return self._metrics.snapshot(
             queue_depth=len(self._queue), in_flight=in_flight,
             dispatch_key=self.dispatch_key, policy=self.policy,
-            linger_window_ms=self._linger_window_ms)
+            linger_window_ms=linger_window_ms)
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; serve (``wait=True``) or cancel the backlog.
@@ -524,10 +738,14 @@ class PropagateEngine:
         Idempotent.  New ``submit`` calls raise ``RuntimeError`` immediately;
         the background scheduler thread (if any) is joined before the
         backlog is handled, so after return no dispatch is in flight.
-        ``wait=False`` cancels every queued future instead of serving it
-        (counted under ``cancelled`` in the metrics).  Also invoked by the
-        context manager: ``__exit__`` serves the backlog on a clean exit and
-        cancels it when unwinding an exception.
+        ``wait=False`` cancels every queued *live* future instead of
+        serving it (counted under ``cancelled`` in the metrics) — but
+        entries whose EDF deadline already expired still resolve with the
+        pinned :class:`DeadlineExceeded` (counted under ``expired``):
+        "expired" is an outcome the client was promised a typed exception
+        for, and a teardown path must not degrade it into a bare cancel.
+        Also invoked by the context manager: ``__exit__`` serves the
+        backlog on a clean exit and cancels it when unwinding an exception.
         """
         if self._closed:
             return
@@ -540,10 +758,19 @@ class PropagateEngine:
             self.flush()
         else:
             live, cancelled, expired = self._queue.drain(self._queue.maxsize)
-            for entry in live + expired:
+            n_cancelled = len(cancelled)
+            for entry in live:
                 entry.future.cancel()
-            self._metrics.count(
-                "cancelled", len(live) + len(cancelled) + len(expired))
+                n_cancelled += 1
+            for entry in expired:
+                if entry.future.set_running_or_notify_cancel():
+                    entry.future.set_exception(DeadlineExceeded(
+                        f"deadline_ms={entry.request.deadline_ms} expired "
+                        f"before dispatch (engine shut down)"))
+                    self._metrics.count("expired")
+                else:
+                    n_cancelled += 1
+            self._metrics.count("cancelled", n_cancelled)
 
     def __enter__(self) -> "PropagateEngine":
         return self

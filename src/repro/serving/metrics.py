@@ -60,6 +60,14 @@ class MetricsSnapshot:
     failed: int = 0  # futures resolved with an exception (bad dispatch)
     dispatches: int = 0  # batched device dispatches issued
     batched_requests: int = 0  # real (non-padding) requests in those dispatches
+    scheduler_errors: int = 0  # scheduler-internal faults the loop survived
+    #   (NOT per-request failures — those resolve futures and count under
+    #   ``failed``); nonzero here means the background thread hit and
+    #   logged an unexpected exception, so check the logs
+    preemptions: int = 0  # segment-boundary yields: an in-flight segmented
+    #   scan paused so urgent-deadline arrivals could dispatch first
+    preempt_iters: int = 0  # LP iterations still pending at those yields —
+    #   the amount of in-flight work each preemption stepped in front of
     queue_depth: int = 0  # entries waiting right now (gauge)
     in_flight: int = 0  # drained but not yet resolved (gauge)
     linger_window_ms: float = float("nan")  # current adaptive batching window
@@ -90,6 +98,9 @@ class EngineMetrics:
             failed=0,
             dispatches=0,
             batched_requests=0,
+            scheduler_errors=0,
+            preemptions=0,
+            preempt_iters=0,
         )
         self._latencies_ms: deque[float] = deque(maxlen=latency_window)
 

@@ -140,6 +140,10 @@ class RequestQueue:
         # ranks are static functions of the entry, so heap order is exact
         self._fifo: deque[QueueEntry] = deque()
         self._heap: list[tuple[float, int, QueueEntry]] = []
+        # lifetime pops (live + cancelled + expired): lets a consumer bound
+        # "drain what was queued at time T" without racing fresh producers
+        # (PropagateEngine.flush snapshots this against len())
+        self._popped = 0
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
@@ -211,6 +215,24 @@ class RequestQueue:
             key = self._heap[0][0]
             return key if key != float("inf") else None
 
+    def deadline_before(self, horizon: float) -> bool:
+        """True iff some queued entry's deadline falls before ``horizon``.
+
+        The peek-urgency predicate behind preemptible dispatch: between
+        scan segments the engine asks "would anything queued expire before
+        the in-flight work finishes?" — a cheap O(1) heap peek, never a
+        pop.  Always ``False`` outside the ``edf`` discipline (no deadline
+        order to consult).
+        """
+        nearest = self.next_deadline()
+        return nearest is not None and nearest < horizon
+
+    @property
+    def popped(self) -> int:
+        """Monotone count of entries ever popped (live, cancelled, expired)."""
+        with self._lock:
+            return self._popped
+
     def _pop_locked(self) -> QueueEntry:
         if self.discipline == "fifo":
             return self._fifo.popleft()
@@ -244,6 +266,45 @@ class RequestQueue:
                     expired.append(entry)
                     continue
                 live.append(entry)
+            self._popped += len(live) + len(cancelled) + len(expired)
+            if live or cancelled or expired:
+                self._not_full.notify_all()
+        return live, cancelled, expired
+
+    def drain_urgent(
+        self, max_items: int, horizon: float
+    ) -> tuple[list[QueueEntry], list[QueueEntry], list[QueueEntry]]:
+        """Atomically pop only entries whose deadline falls before ``horizon``.
+
+        The preemption drain: when a suspended scan yields at a segment
+        boundary, the engine serves exactly the requests that could not
+        have survived waiting for it — entries with ``t_deadline <
+        horizon`` — and leaves everything else queued in discipline order
+        for the normal scheduler pass.  The ``edf`` heap is deadline-
+        ordered, so this is a prefix pop that stops at the first
+        non-urgent entry.  Returns ``(live, cancelled, expired)`` exactly
+        like :meth:`drain`; empty lists outside the ``edf`` discipline.
+        """
+        live: list[QueueEntry] = []
+        cancelled: list[QueueEntry] = []
+        expired: list[QueueEntry] = []
+        if self.discipline != "edf":
+            return live, cancelled, expired
+        now = self._clock()
+        with self._not_full:
+            while self._heap and len(live) < max_items:
+                key = self._heap[0][0]
+                if key == float("inf") or key >= horizon:
+                    break
+                entry = heapq.heappop(self._heap)[2]
+                if entry.future.cancelled():
+                    cancelled.append(entry)
+                    continue
+                if entry.t_deadline is not None and now > entry.t_deadline:
+                    expired.append(entry)
+                    continue
+                live.append(entry)
+            self._popped += len(live) + len(cancelled) + len(expired)
             if live or cancelled or expired:
                 self._not_full.notify_all()
         return live, cancelled, expired

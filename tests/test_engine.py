@@ -203,6 +203,129 @@ def test_metrics_snapshot_counters(small_fitted_vdt):
     assert m.latency_p50_ms > 0 and m.latency_p95_ms >= m.latency_p50_ms
 
 
+# ------------------------------------------------- shutdown/flush contracts
+class _FakeClock:
+    """Deterministic time source for deadline-sensitive lifecycle tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def test_submit_shutdown_race_cancels_orphan(small_fitted_vdt):
+    """An entry landing during the final flush (put succeeded, then
+    shutdown won the race) must come back cancelled + RuntimeError — never
+    as a future nobody will ever resolve."""
+    x, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, start=False)
+    real_put = eng._queue.put
+
+    def racing_put(entry, **kw):
+        real_put(entry, **kw)
+        eng._closed = True  # shutdown wins the race right after the put
+
+    eng._queue.put = racing_put
+    fut_holder = []
+    with pytest.raises(RuntimeError, match="shut down"):
+        eng.submit(PropagateRequest(
+            y0=np.zeros((x.shape[0], 1), np.float32)))
+    assert eng.metrics().cancelled == 1
+    assert eng.metrics().submitted == 0
+    assert not fut_holder  # nothing escaped to a caller
+
+
+@pytest.mark.parametrize("wait", [True, False])
+def test_shutdown_resolves_expired_with_deadline_exceeded(
+        small_fitted_vdt, wait):
+    """Both shutdown paths honor the pinned DeadlineExceeded contract for
+    entries that expired while queued: ``wait=False`` must not degrade
+    them into a bare ``cancel()``."""
+    from repro.serving.queue import DeadlineExceeded
+
+    x, vdt = small_fitted_vdt
+    clock = _FakeClock()
+    eng = PropagateEngine(vdt, start=False, policy="edf", clock=clock)
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    doomed = eng.submit(PropagateRequest(y0=y0, n_iters=2, deadline_ms=10.0))
+    live = eng.submit(PropagateRequest(y0=y0, n_iters=2))
+    clock.advance(1.0)  # the deadlined entry expires while queued
+
+    eng.shutdown(wait=wait)
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=0)
+    m = eng.metrics()
+    assert m.expired == 1
+    if wait:
+        assert live.result(timeout=0) is not None
+        assert m.completed == 1 and m.cancelled == 0
+    else:
+        assert live.cancelled()
+        assert m.completed == 0 and m.cancelled == 1
+
+
+def test_flush_drains_snapshot_under_concurrent_producers(small_fitted_vdt):
+    """flush() serves the backlog present at call time and terminates even
+    when producers keep pace with service — the old ``while len(queue)``
+    loop would livelock (or here: drain the producer's traffic forever)."""
+    x, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, start=False, max_batch=1)
+    y0 = np.zeros((x.shape[0], 1), np.float32)
+    backlog = [eng.submit(PropagateRequest(y0=y0, n_iters=2))
+               for _ in range(3)]
+
+    extra = []
+    real_step = eng.step
+
+    def feeding_step():
+        n = real_step()
+        # a concurrent producer lands one request per service round
+        extra.append(eng.submit(PropagateRequest(y0=y0, n_iters=2)))
+        return n
+
+    eng.step = feeding_step
+    resolved = eng.flush()
+    assert resolved == 3  # exactly the snapshot backlog
+    assert all(f.done() for f in backlog)
+    assert len(extra) == 3 and not any(f.done() for f in extra)
+    assert len(eng._queue) == 3  # racing traffic waits for the next pass
+    eng.step = real_step
+    eng.shutdown()  # serves the stragglers
+    assert all(f.done() for f in extra)
+
+
+def test_scheduler_internal_error_counted_and_survived(
+        small_fitted_vdt, caplog):
+    """A scheduler-internal fault must not kill the loop silently: it is
+    counted (scheduler_errors), its traceback logged, and the next
+    iteration serves traffic normally."""
+    x, vdt = small_fitted_vdt
+    eng = PropagateEngine(vdt, max_wait_ms=0)
+    fired = threading.Event()
+    real_step = eng.step
+
+    def bad_step():
+        if not fired.is_set():
+            fired.set()
+            raise RuntimeError("injected scheduler fault")
+        return real_step()
+
+    eng.step = bad_step
+    with caplog.at_level("ERROR", logger="repro.serving.engine"):
+        fut = eng.submit(PropagateRequest(
+            y0=np.zeros((x.shape[0], 1), np.float32), n_iters=2))
+        assert fut.result(timeout=60) is not None
+    assert eng.metrics().scheduler_errors >= 1
+    assert "scheduler iteration failed" in caplog.text
+    assert "injected scheduler fault" in caplog.text  # full traceback, not a swallow
+    eng.shutdown()
+
+
 # --------------------------------------- propagate_many alpha fragmentation
 def test_alpha_canonicalization_regression(small_fitted_vdt, monkeypatch):
     """Near-equal alphas (0.01 vs 0.010000001) must share one dispatch —

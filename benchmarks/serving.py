@@ -22,6 +22,15 @@ to per-policy bounds in ``benchmarks/baselines.json``:
                      requests carry tight deadlines, under ``fifo`` vs
                      ``edf``.  EDF must actually meet deadlines:
                      ``edf.deadline_miss_rate`` is gated with a MAX bound.
+``multi-tenant``     three tenants (gold:silver:bronze weights 3:1:1) share
+                     ONE fitted tree behind an ``EngineFleet``; per-tenant
+                     closed-loop clients keep every tenant backlogged and
+                     the deficit-round-robin scheduler must split the
+                     measured window's throughput by weight.  The gate
+                     bounds: the window's worst relative share deviation
+                     (``fleet.fair_share_err``, MAX) plus per-tenant p95
+                     caps — fair sharing must not come at the price of an
+                     unbounded tail for any tenant.
 ``preempt``          head-of-line blocking behind IN-FLIGHT work: bulk
                      clients keep long scans (``BULK_ITERS`` iterations) on
                      the device while tight-deadline arrivals land mid-scan,
@@ -54,8 +63,8 @@ import jax
 from benchmarks.common import emit, json_path, write_json
 from repro.core.vdt import VariationalDualTree
 from repro.data.synthetic import secstr_like
-from repro.serving.engine import DeadlineExceeded, PropagateEngine
-from repro.serving.propagate import PropagateRequest
+from repro.serving import (DeadlineExceeded, EngineFleet, PropagateEngine,
+                           PropagateRequest)
 
 TINY = bool(os.environ.get("BENCH_TINY"))
 N = 256 if TINY else 4096
@@ -87,8 +96,17 @@ URGENT_DEADLINE_MS = 100.0 if TINY else 5000.0
 URGENT_COUNT = 12 if TINY else 24
 BULK_CLIENTS = 2
 
+# multi-tenant scenario: weights must sum small and integer-ratio so the
+# expected shares are exact; clients per tenant x pipeline keeps every
+# tenant's queue several dispatch quanta deep, the regime where DRR's
+# share guarantee applies
+TENANT_WEIGHTS = (("gold", 3.0), ("silver", 1.0), ("bronze", 1.0))
+TENANT_CLIENTS = 2
+FLEET_PIPELINE = 8
+FLEET_MEASURE_S = 2.0 if TINY else 4.0
+
 SCENARIOS = ("uniform", "bursty", "mixed-priority", "deadline-heavy",
-             "preempt")
+             "multi-tenant", "preempt")
 
 
 def make_requests(rng, count):
@@ -325,6 +343,95 @@ def scenario_deadline_heavy(vdt, rng) -> dict:
     return out
 
 
+# ------------------------------------------------------------- multi-tenant
+def scenario_multi_tenant(vdt, rng) -> dict:
+    """Weighted fair sharing across tenants of one fleet, one fitted tree.
+
+    Every tenant runs the same closed-loop load shape
+    (``TENANT_CLIENTS`` clients x ``FLEET_PIPELINE`` outstanding), so
+    demand exceeds fleet capacity for each tenant individually and the
+    measured throughput split is purely the DRR scheduler's doing.  The
+    window figures come from differencing two fleet metrics snapshots
+    (lifetime counters include warmup traffic; the window does not).
+    """
+    weights = dict(TENANT_WEIGHTS)
+    wsum = sum(weights.values())
+    seeds = {name: [_qos_seed(rng) for _ in range(TENANT_CLIENTS)]
+             for name in weights}
+    fleet = EngineFleet(quantum=float(QOS_MAX_BATCH))
+    engines = {}
+    for name, w in TENANT_WEIGHTS:
+        engines[name] = fleet.register(
+            name, vdt, weight=w, max_batch=QOS_MAX_BATCH, max_wait_ms=5.0,
+            max_queue=512)
+        engines[name].warmup(widths=(QOS_WIDTH,), n_iters=(LP_ITERS,))
+    stop = threading.Event()
+
+    def client(tenant, cid):
+        futs = deque()
+        while not stop.is_set():
+            while len(futs) < FLEET_PIPELINE:
+                futs.append(fleet.submit(PropagateRequest(
+                    seeds[tenant][cid], alpha=0.05, n_iters=LP_ITERS,
+                    tenant=tenant)))
+            futs.popleft().result(timeout=600)
+        while futs:
+            futs.popleft().result(timeout=600)
+
+    threads = [threading.Thread(target=client, args=(name, cid))
+               for name in weights for cid in range(TENANT_CLIENTS)]
+    for t in threads:
+        t.start()
+    time.sleep(0.5)  # let every tenant's backlog build before measuring
+    before = fleet.metrics()
+    time.sleep(FLEET_MEASURE_S)
+    after = fleet.metrics()
+    stop.set()
+    for t in threads:
+        t.join()
+    fleet.shutdown()
+
+    tenants, total = {}, 0
+    for name in weights:
+        done = after.tenants[name].completed - before.tenants[name].completed
+        total += done
+        tenants[name] = {"completed": done}
+    err = 0.0
+    for name, w in weights.items():
+        expected = w / wsum
+        share = tenants[name]["completed"] / max(1, total)
+        err = max(err, abs(share - expected) / expected)
+        disp = (after.tenants[name].dispatches
+                - before.tenants[name].dispatches)
+        batched = (after.tenants[name].batched_requests
+                   - before.tenants[name].batched_requests)
+        tenants[name].update({
+            "share": share,
+            "expected_share": expected,
+            "latency_p50_ms": after.tenants[name].latency_p50_ms,
+            "latency_p95_ms": after.tenants[name].latency_p95_ms,
+            "occupancy": batched / max(1, disp),
+        })
+        emit(f"serving/multi-tenant/{name}/n={N}/w={w:g}",
+             after.tenants[name].latency_p95_ms * 1e3,
+             f"share={share:.3f} (expected {expected:.3f}) "
+             f"completed={tenants[name]['completed']} "
+             f"p95={after.tenants[name].latency_p95_ms:.0f}ms "
+             f"occupancy={tenants[name]['occupancy']:.1f}")
+    emit(f"serving/multi-tenant/fair_share_err/n={N}", err * 1e6,
+         f"err={err:.3f} window={FLEET_MEASURE_S:.1f}s "
+         f"total={total} rounds={after.rounds - before.rounds}")
+    return {
+        "weights": {name: w for name, w in TENANT_WEIGHTS},
+        "window_s": FLEET_MEASURE_S,
+        "completed_in_window": total,
+        "rounds_in_window": after.rounds - before.rounds,
+        "fair_share_err": err,
+        "lifetime_fair_share_err": after.fair_share_err,
+        "tenants": tenants,
+    }
+
+
 # ----------------------------------------------------------------- preempt
 def scenario_preempt(vdt, rng) -> dict:
     """Urgent-arrival latency against in-flight long scans, mono vs segmented.
@@ -424,6 +531,8 @@ def run(scenarios=SCENARIOS) -> dict:
         sections["mixed_priority"] = scenario_mixed_priority(vdt, rng)
     if "deadline-heavy" in scenarios:
         sections["edf"] = scenario_deadline_heavy(vdt, rng)
+    if "multi-tenant" in scenarios:
+        sections["fleet"] = scenario_multi_tenant(vdt, rng)
     if "preempt" in scenarios:
         sections["preempt"] = scenario_preempt(vdt, rng)
 

@@ -17,8 +17,7 @@ import numpy as np
 
 from repro.core import VariationalDualTree, one_hot_labels
 from repro.data.synthetic import digit1_like
-from repro.serving.engine import PropagateEngine
-from repro.serving.propagate import PropagateRequest
+from repro.serving import PropagateEngine, PropagateRequest
 
 
 async def client(cid, eng, data, n, n_requests, rng_seed, iters):

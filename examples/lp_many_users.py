@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import VariationalDualTree, ccr, one_hot_labels
 from repro.data.synthetic import digit1_like
-from repro.serving.propagate import PropagateRequest, propagate_many
+from repro.serving import PropagateRequest, propagate_many
 
 
 def main():

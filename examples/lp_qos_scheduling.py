@@ -20,8 +20,8 @@ import time
 import numpy as np
 
 from repro.core import VariationalDualTree
-from repro.serving.engine import (DeadlineExceeded, PropagateEngine,
-                                  PropagateRequest)
+from repro.serving import (DeadlineExceeded, PropagateEngine,
+                           PropagateRequest)
 
 ITERS = 30
 

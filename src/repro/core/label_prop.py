@@ -54,7 +54,8 @@ from repro.core.matvec import mpt_matvec_leaforder
 __all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
            "lp_scan_leaforder_resume", "lp_scan_leaforder_segmented",
            "lp_scan_fused", "lp_scan_fused_resume", "lp_scan_fused_segmented",
-           "route_backend", "AUTO_EXACT_MAX_N", "ccr"]
+           "route_backend", "AUTO_EXACT_MAX_N", "CONCRETE_BACKENDS",
+           "ccr"]
 
 # `backend="auto"` routes to the exact eq.-3 scan at or below this many
 # points: one exact LP iteration is O(N^2 d) streamed, which at this scale
@@ -62,6 +63,11 @@ __all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
 # as well get the ground-truth walk.  Above it, auto traffic rides the
 # fitted O(|B|) approximation.
 AUTO_EXACT_MAX_N = 1024
+
+# the two concrete scan implementations every routing tag resolves to —
+# the serving tier's validate/group-key/warmup paths all share this
+# vocabulary, so a new backend lands in exactly one place
+CONCRETE_BACKENDS = ("vdt", "exact")
 
 
 def route_backend(requested, default: str = "vdt", *, n=None,
@@ -82,7 +88,7 @@ def route_backend(requested, default: str = "vdt", *, n=None,
         if n is None:
             raise ValueError("backend='auto' routing needs the problem size n")
         return "exact" if int(n) <= int(auto_exact_max_n) else "vdt"
-    if requested not in ("vdt", "exact"):
+    if requested not in CONCRETE_BACKENDS:
         raise ValueError(
             f"backend must be 'vdt', 'exact', 'auto' or None, got {requested!r}")
     return requested

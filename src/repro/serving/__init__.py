@@ -1,0 +1,54 @@
+"""Public serving API: one blessed import surface for the whole tier.
+
+Everything a serving user needs imports from HERE::
+
+    from repro.serving import EngineFleet, PropagateEngine, PropagateRequest
+
+The layers underneath:
+
+* :class:`Engine` / :class:`FitParams` / :class:`DispatchState` /
+  :class:`ResultSlab` — the abstract engine contract
+  (:mod:`repro.serving.engine_api`): params/state separation, slot-based
+  result slabs, the lifecycle every engine implements.
+* :class:`PropagateEngine` — the continuous-batching engine over one
+  fitted variational dual tree (the first :class:`Engine` implementation).
+* :class:`EngineFleet` / :class:`FleetMetricsSnapshot` — the multi-tenant
+  front-end: tenant -> fitted tree -> engine routing with weighted
+  deficit-round-robin fair queueing.
+* :func:`propagate_many` — static-list batching over one fitted tree.
+* :class:`PropagateRequest` — the one request type every entry point
+  accepts; :class:`QueueFull` / :class:`DeadlineExceeded` — the
+  backpressure / deadline exceptions; :class:`MetricsSnapshot` — per-engine
+  observability.
+
+The historical deep modules (``repro.serving.engine``,
+``repro.serving.propagate``, ``repro.serving.queue``,
+``repro.serving.metrics``) still import but are deprecated shims over the
+private ``_*`` implementation modules; new code should import from this
+package directly.  ``tools/check_api.py`` pins this surface against
+``tests/api_snapshot.json`` in CI.
+"""
+from repro.serving._batching import (DEFAULT_WIDTH_BUCKETS, PropagateRequest)
+from repro.serving._engine import PropagateEngine
+from repro.serving._metrics import MetricsSnapshot
+from repro.serving._propagate import propagate_many
+from repro.serving._queue import DeadlineExceeded, QueueFull
+from repro.serving.engine_api import (DispatchState, Engine, FitParams,
+                                      ResultSlab)
+from repro.serving.fleet import EngineFleet, FleetMetricsSnapshot
+
+__all__ = [
+    "DEFAULT_WIDTH_BUCKETS",
+    "DeadlineExceeded",
+    "DispatchState",
+    "Engine",
+    "EngineFleet",
+    "FitParams",
+    "FleetMetricsSnapshot",
+    "MetricsSnapshot",
+    "PropagateEngine",
+    "PropagateRequest",
+    "QueueFull",
+    "ResultSlab",
+    "propagate_many",
+]

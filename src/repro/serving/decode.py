@@ -28,9 +28,11 @@ from repro.models.whisper import encoder_forward
 # Label-propagation requests ride the same serving layer: propagate_many
 # pads/buckets variable-width label matrices into batched VDT dispatches,
 # and PropagateEngine serves a live queue of them with continuous batching.
-from repro.serving.engine import DeadlineExceeded, PropagateEngine, QueueFull
-from repro.serving.metrics import MetricsSnapshot
-from repro.serving.propagate import PropagateRequest, propagate_many
+from repro.serving._batching import PropagateRequest
+from repro.serving._engine import PropagateEngine
+from repro.serving._metrics import MetricsSnapshot
+from repro.serving._propagate import propagate_many
+from repro.serving._queue import DeadlineExceeded, QueueFull
 
 __all__ = ["DecodeState", "init_state", "prefill", "decode_step",
            "DECODE_SLACK", "DeadlineExceeded", "MetricsSnapshot",

@@ -1,0 +1,186 @@
+"""The abstract serving-engine contract every LP engine implements.
+
+This is the repo's counterpart of JetStream's ``engine_api.py``: a formal
+API boundary between *what a serving engine promises* (this module) and
+*how one particular engine delivers it* (``serving/_engine.py``'s
+:class:`~repro.serving.PropagateEngine`, the continuous-batching engine
+over one fitted variational dual tree).  Everything above the engine — the
+multi-tenant :class:`~repro.serving.fleet.EngineFleet`, benchmarks,
+examples — programs against :class:`Engine`, so a sharded multi-device
+engine or a shared-memory multi-process engine can slot in underneath
+without touching the routing/fair-queueing layer.
+
+Params / state separation
+-------------------------
+An engine's data splits into two halves with very different lifecycles,
+and the API keeps them formally apart:
+
+* :attr:`Engine.fit_params` (:class:`FitParams`) — the **immutable fitted
+  half**: the variational dual tree, its q distribution, dispatch buffers.
+  Fitting is the expensive offline step (the paper's premise is that ONE
+  fitted tree amortizes across millions of random-walk queries), and
+  nothing on the serving path ever writes to it — which is exactly what
+  makes it shareable: across engines in one process today, across worker
+  processes via shared memory or across devices via ``jax.sharding``
+  tomorrow.
+* :attr:`Engine.dispatch_state` (:class:`DispatchState`) — the **mutable
+  serving half**: the bounded request queue, pooled host staging buffers,
+  and the metrics sink.  Exactly one scheduler owns it; it is never shared
+  and never outlives the engine.
+
+Slot-based results
+------------------
+:class:`ResultSlab` is the result layout contract (JetStream's
+``ResultTokens`` idea): a dispatch resolves the whole group's answers as
+**one** device-to-host array plus per-slot index metadata, because copying
+a single contiguous array to host is much faster than one transfer per
+request.  Each request's future then resolves to a zero-copy view into the
+slab, sliced back to its true label width.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from concurrent.futures import Future
+from typing import Any, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.serving._batching import PropagateRequest
+from repro.serving._metrics import MetricsSnapshot
+
+__all__ = ["DispatchState", "Engine", "FitParams", "ResultSlab"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FitParams:
+    """The immutable fitted half of an engine (see module docstring).
+
+    ``model`` is the fitted object every dispatch reads (for the VDT
+    engine: the :class:`~repro.core.vdt.VariationalDualTree`, whose block
+    structure, q distribution, and cached device dispatch buffers are all
+    frozen at fit time).  ``n_points`` and ``divergence`` are the two
+    pieces of fitted identity the serving layer itself consumes: the
+    request-shape contract and the compile-cache key component.
+    """
+
+    model: Any
+    n_points: int
+    divergence: str
+
+
+@dataclasses.dataclass
+class DispatchState:
+    """Live handles to the mutable serving half of an engine.
+
+    These are the engine's working structures, not copies: ``queue`` is
+    the bounded request queue, ``staging`` the pooled host staging buffers
+    keyed by ``(batch bucket, width bucket)``, and ``metrics`` the mutable
+    event sink behind :meth:`Engine.metrics` snapshots.  The contract is
+    ownership, not thread-safety: exactly one scheduler drives this state,
+    and sharing it between schedulers (unlike :class:`FitParams`, which is
+    freely shareable) is a bug.
+    """
+
+    queue: Any
+    staging: Mapping[tuple[int, int], np.ndarray]
+    metrics: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ResultSlab:
+    """One dispatch's answers as a single host array + slot metadata.
+
+    ``data`` is the dispatch's full ``(slots, N, width bucket)`` output,
+    copied device-to-host **once** for the whole group.  ``widths[k]`` is
+    slot ``k``'s true label width (``<=`` the bucket; padding columns and
+    padding slots hold zeros).  :meth:`view` hands out per-request answers
+    as zero-copy numpy views into that one array.
+    """
+
+    data: np.ndarray
+    widths: tuple[int, ...]
+
+    @property
+    def slots(self) -> int:
+        """Number of real (non-padding) request slots in the slab."""
+        return len(self.widths)
+
+    def view(self, slot: int) -> np.ndarray:
+        """Slot ``slot``'s ``(N, widths[slot])`` answer — a view, not a copy."""
+        if not 0 <= slot < len(self.widths):
+            raise IndexError(
+                f"slot {slot} out of range for a {len(self.widths)}-slot slab")
+        return self.data[slot, :, : self.widths[slot]]
+
+
+class Engine(abc.ABC):
+    """Abstract continuous-batching LP serving engine.
+
+    The contract (see the module docstring for the params/state split and
+    the slot-based result layout):
+
+    * :meth:`submit` is thread-safe, validates at the call site (pinned
+      ``ValueError`` via :meth:`PropagateRequest.validate
+      <repro.serving._batching.PropagateRequest.validate>`; ``QueueFull``
+      as backpressure), and returns a per-request
+      :class:`~concurrent.futures.Future` resolving to the ``(N, C)``
+      answer;
+    * exactly one scheduler drives dispatches — a background thread, an
+      external owner calling :meth:`step`/:meth:`flush` (how the fleet and
+      the deterministic tests drive engines), never both;
+    * :meth:`warmup` pre-compiles the reachable executable grid so
+      production traffic never stalls on a compile;
+    * :meth:`metrics` returns an immutable snapshot that never aliases
+      live mutable state;
+    * :meth:`shutdown` is idempotent; engines are context managers
+      (``__exit__`` serves the backlog on clean exit, cancels it when
+      unwinding an exception).
+    """
+
+    # ------------------------------------------------------- data halves
+    @property
+    @abc.abstractmethod
+    def fit_params(self) -> FitParams:
+        """The immutable fitted half — shareable, never written at serve time."""
+
+    @property
+    @abc.abstractmethod
+    def dispatch_state(self) -> DispatchState:
+        """The mutable serving half — owned by exactly one scheduler."""
+
+    # --------------------------------------------------------- serving
+    @abc.abstractmethod
+    def submit(self, request: PropagateRequest, *, block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Enqueue one validated request; future of its ``(N, C)`` answer."""
+
+    @abc.abstractmethod
+    def warmup(self, widths: Optional[Sequence[int]] = None,
+               n_iters: Sequence[int] = (500,),
+               backends: Optional[Sequence[str]] = None) -> int:
+        """Pre-compile the reachable dispatch grid; returns executables warmed."""
+
+    @abc.abstractmethod
+    def step(self) -> int:
+        """One synchronous scheduler iteration; returns futures resolved."""
+
+    @abc.abstractmethod
+    def flush(self) -> int:
+        """Serve the backlog present at call time; returns futures resolved."""
+
+    # ------------------------------------------------------ observability
+    @abc.abstractmethod
+    def metrics(self) -> MetricsSnapshot:
+        """Immutable point-in-time snapshot of engine health."""
+
+    # --------------------------------------------------------- lifecycle
+    @abc.abstractmethod
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop intake; serve (``wait=True``) or cancel the backlog."""
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=exc == (None, None, None))

@@ -1,47 +1,24 @@
-"""Multi-request Label-Propagation serving over one fitted VDT.
+"""Deprecated shim: import from :mod:`repro.serving` instead.
 
-One fitted :class:`~repro.core.vdt.VariationalDualTree` can answer many
-concurrent propagation queries (different seed labels, different label
-widths, different alphas) — the ROADMAP's many-users story.  This module
-turns a heterogeneous request list into as few batched device dispatches as
-possible:
-
-  1. requests are grouped by ``(alpha, n_iters, width bucket)`` — only
-     same-recipe requests can share a ``lax.scan``.  The alpha component of
-     the key is *canonicalized* (rounded to :data:`ALPHA_SIG_DIGITS`
-     significant digits) so near-equal alphas coming from different clients
-     (0.01 vs 0.010000001) land in the same group instead of fragmenting
-     into separate dispatches;
-  2. within a group, each ``(N, C_r)`` label matrix is zero-padded on the
-     channel axis to the bucket width ``Cb`` (the next configured bucket
-     ``>= C_r``) so heterogeneous widths stack without a recompile per
-     width — LP is column-independent and linear, so zero seed columns stay
-     identically zero and never leak into real columns;
-  3. the stacked ``(B, N, Cb)`` batch runs through the channel-folded
-     batched ``label_propagate`` (one Algorithm-1 dispatch per iteration for
-     the WHOLE batch), chunked at ``max_batch`` to bound device memory;
-  4. answers are sliced back to each request's true width and returned in
-     request order.
-
-Bucketing bounds compile cache growth: at most ``len(buckets)`` distinct
-channel widths ever reach the jitted path, whatever widths users send.
-
-The width-bucket policy (:data:`DEFAULT_WIDTH_BUCKETS`, :func:`bucket_width`)
-is shared with the continuous-batching
-:class:`~repro.serving.engine.PropagateEngine`, which applies it to a live
-queue instead of a static request list.  The remaining helpers serve this
-module's static batching: the engine needs neither :func:`canonical_alpha`
-nor per-alpha grouping (each request's alpha rides its dispatch as one
-element of a traced array) and stages into reusable buffers instead of
-:func:`stack_group`'s fresh stacks.
+The static-batching implementation moved to the private
+``repro.serving._propagate`` module (and the shared coalescing vocabulary
+to ``repro.serving._batching``); this module re-exports the historical
+names so existing imports keep working, with a :class:`DeprecationWarning`
+at import time.
 """
-from __future__ import annotations
+import warnings
 
-import dataclasses
-from typing import Optional, Sequence
+from repro.serving._batching import (ALPHA_SIG_DIGITS, DEFAULT_WIDTH_BUCKETS,
+                                     PropagateRequest, bucket_width,
+                                     canonical_alpha, group_key, pad_to_width,
+                                     stack_group)
+from repro.serving._propagate import propagate_many
 
-import jax
-import jax.numpy as jnp
+warnings.warn(
+    "repro.serving.propagate is deprecated; import PropagateRequest and "
+    "propagate_many from repro.serving (coalescing helpers live in "
+    "repro.serving._batching)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "ALPHA_SIG_DIGITS",
@@ -54,127 +31,3 @@ __all__ = [
     "propagate_many",
     "stack_group",
 ]
-
-# powers of two keep the folded channel axis (batch * Cb) lane-friendly
-DEFAULT_WIDTH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
-
-# alphas agreeing to this many significant digits share a dispatch group:
-# float32 LP cannot distinguish finer alpha differences anyway, and a raw
-# float(alpha) key would let 0.01 vs 0.010000001 fragment the batch.
-ALPHA_SIG_DIGITS = 6
-
-
-@dataclasses.dataclass(frozen=True)
-class PropagateRequest:
-    """One LP query: seed labels (N, C), its recipe, and its QoS tags.
-
-    ``alpha`` / ``n_iters`` are the propagation recipe (paper eq. 15).  The
-    remaining fields are scheduler-v2 QoS tags, all optional:
-
-    * ``priority`` — larger = more urgent; consumed by the engine's
-      ``"priority"`` queue discipline (ignored by ``"fifo"``/``"edf"``).
-    * ``deadline_ms`` — relative deadline from submit; under the ``"edf"``
-      discipline requests are served earliest-deadline-first and fast-fail
-      with :class:`~repro.serving.queue.DeadlineExceeded` once expired.
-      Other disciplines still count late completions in the metrics.
-    * ``backend`` — per-request transition-matrix routing: ``None`` (the
-      serving default), ``"vdt"``, ``"exact"`` (e.g. validation-tagged
-      traffic pinned to the ground-truth eq.-3 walk), or ``"auto"``
-      (exact for small N); see :func:`repro.core.label_prop.route_backend`.
-    """
-    y0: jax.Array
-    alpha: float = 0.01
-    n_iters: int = 500
-    priority: int = 0
-    deadline_ms: Optional[float] = None
-    backend: Optional[str] = None
-
-
-def bucket_width(c: int, buckets: Sequence[int]) -> int:
-    """Smallest configured bucket ``>= c`` (the padded channel width)."""
-    for b in buckets:
-        if c <= b:
-            return b
-    raise ValueError(
-        f"label width {c} exceeds the largest bucket {max(buckets)}; "
-        f"extend `buckets` to serve wider label matrices")
-
-
-def canonical_alpha(alpha: float) -> float:
-    """Round ``alpha`` to :data:`ALPHA_SIG_DIGITS` significant digits.
-
-    The canonical value is used both as the group key AND as the alpha
-    actually dispatched, so two requests that group together produce
-    bit-identical recipes.
-    """
-    return float(f"{float(alpha):.{ALPHA_SIG_DIGITS}g}")
-
-
-def group_key(alpha: float, n_iters: int, c: int,
-              buckets: Sequence[int],
-              backend: str = "vdt") -> tuple[float, int, int, str]:
-    """Dispatch-group key ``(canonical alpha, n_iters, width bucket, backend)``.
-
-    ``backend`` must already be resolved (``"vdt"`` / ``"exact"``, see
-    :func:`repro.core.label_prop.route_backend`): only requests running
-    against the same transition matrix can share a dispatch, and resolving
-    BEFORE keying means ``None``/``"auto"`` tags that route to the same
-    concrete backend never fragment an otherwise-coalescible batch.
-    """
-    return (canonical_alpha(alpha), int(n_iters), bucket_width(c, buckets),
-            backend)
-
-
-def pad_to_width(y0: jax.Array, cb: int) -> jax.Array:
-    """Zero-pad ``(N, C)`` seed labels to ``(N, cb)`` on the channel axis."""
-    c = y0.shape[-1]
-    if c == cb:
-        return y0
-    return jnp.pad(y0, ((0, 0), (0, cb - c)))
-
-
-def stack_group(y0s: Sequence[jax.Array], cb: int) -> jax.Array:
-    """Stack same-bucket seed matrices into one ``(B, N, cb)`` batch."""
-    return jnp.stack([pad_to_width(y0, cb) for y0 in y0s])
-
-
-def propagate_many(
-    vdt,
-    requests: Sequence[PropagateRequest],
-    *,
-    buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
-    max_batch: int = 64,
-) -> list[jax.Array]:
-    """Serve many LP requests against ``vdt``; results in request order.
-
-    Each returned array has the exact ``(N, C_r)`` shape of its request's
-    seed matrix.  Requests sharing ``(canonical alpha, n_iters)`` and a
-    width bucket are answered by a single batched ``label_propagate``
-    dispatch (chunked at ``max_batch``).
-    """
-    from repro.core.label_prop import route_backend
-
-    buckets = tuple(sorted(set(int(b) for b in buckets)))
-    n = vdt.tree.n_points
-    results: list[Optional[jax.Array]] = [None] * len(requests)
-
-    groups: dict[tuple, list[tuple[int, jax.Array, int]]] = {}
-    for idx, req in enumerate(requests):
-        y0 = jnp.asarray(req.y0, jnp.float32)
-        if y0.ndim != 2 or y0.shape[0] != n:
-            raise ValueError(
-                f"request {idx}: y0 must be (N={n}, C), got {y0.shape}")
-        c = int(y0.shape[1])
-        backend = route_backend(req.backend, "vdt", n=n)
-        key = group_key(req.alpha, req.n_iters, c, buckets, backend)
-        groups.setdefault(key, []).append((idx, y0, c))
-
-    for (alpha, n_iters, cb, backend), items in groups.items():
-        for lo in range(0, len(items), max_batch):
-            chunk = items[lo:lo + max_batch]
-            stack = stack_group([y0 for _, y0, _ in chunk], cb)
-            out = vdt.label_propagate(stack, alpha=alpha, n_iters=n_iters,
-                                      batched=True, backend=backend)
-            for k, (idx, _, c) in enumerate(chunk):
-                results[idx] = out[k, :, :c]
-    return results  # type: ignore[return-value]

@@ -1,0 +1,72 @@
+"""Public-API surface: snapshot pinning + deprecation shim contract."""
+import importlib
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_api  # noqa: E402  (tools/ is not a package)
+
+SHIMS = ("repro.serving.engine", "repro.serving.propagate",
+         "repro.serving.queue", "repro.serving.metrics")
+
+
+def test_public_api_matches_snapshot():
+    """The committed snapshot equals the live surface — any intentional
+    API change must regenerate tests/api_snapshot.json in the same PR."""
+    expected = json.loads(check_api.SNAPSHOT.read_text())
+    actual = check_api.describe_surface()
+    problems = check_api.diff_surfaces(expected, actual)
+    assert not problems, (
+        "public API drifted from tests/api_snapshot.json; if intentional, "
+        "run `python tools/check_api.py --update` and commit:\n"
+        + "\n".join(problems))
+
+
+def test_check_api_cli_green():
+    """The CI entry point itself exits 0 against the committed snapshot."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_api.py")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_every_public_name_importable_from_package():
+    import repro.serving as pkg
+
+    for name in pkg.__all__:
+        assert getattr(pkg, name) is not None
+
+
+@pytest.mark.parametrize("module", SHIMS)
+def test_deep_module_shims_warn_but_work(module):
+    """Historical deep imports still resolve — through a DeprecationWarning
+    — and hand back the SAME objects the package exports."""
+    sys.modules.pop(module, None)  # force the import-time warning to re-fire
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        shim = importlib.import_module(module)
+    pkg = importlib.import_module("repro.serving")
+    for name in shim.__all__:
+        shim_obj = getattr(shim, name)
+        pkg_obj = getattr(pkg, name, None)
+        if pkg_obj is not None:  # public names must be identical objects
+            assert shim_obj is pkg_obj, (module, name)
+
+
+def test_shim_objects_are_canonical():
+    """No duplicated classes: a PropagateEngine from the old path IS the
+    class from the new path (isinstance checks keep working across the
+    migration)."""
+    for module in SHIMS:
+        sys.modules.pop(module, None)
+    with pytest.warns(DeprecationWarning):
+        from repro.serving.engine import PropagateEngine as old_engine
+    from repro.serving import PropagateEngine as new_engine
+
+    assert old_engine is new_engine

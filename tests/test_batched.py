@@ -19,7 +19,7 @@ from repro.kernels.fused_lp import (fused_lp_matvec_batched,
                                     fused_lp_scan_batched_ref,
                                     fused_lp_step_batched,
                                     fused_lp_step_batched_ref)
-from repro.serving.propagate import PropagateRequest, propagate_many
+from repro.serving import PropagateRequest, propagate_many
 
 
 def _mv_args(vdt):

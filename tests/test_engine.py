@@ -10,10 +10,9 @@ import threading
 import numpy as np
 import pytest
 
-from repro.serving.engine import PropagateEngine
-from repro.serving.propagate import (PropagateRequest, canonical_alpha,
-                                     group_key, propagate_many)
-from repro.serving.queue import QueueFull
+from repro.serving import (PropagateEngine, PropagateRequest, QueueFull,
+                           propagate_many)
+from repro.serving._batching import canonical_alpha, group_key
 
 ITERS = 8  # plenty for parity, cheap enough for tier-1
 
@@ -246,7 +245,7 @@ def test_shutdown_resolves_expired_with_deadline_exceeded(
     """Both shutdown paths honor the pinned DeadlineExceeded contract for
     entries that expired while queued: ``wait=False`` must not degrade
     them into a bare ``cancel()``."""
-    from repro.serving.queue import DeadlineExceeded
+    from repro.serving import DeadlineExceeded
 
     x, vdt = small_fitted_vdt
     clock = _FakeClock()
@@ -316,7 +315,7 @@ def test_scheduler_internal_error_counted_and_survived(
         return real_step()
 
     eng.step = bad_step
-    with caplog.at_level("ERROR", logger="repro.serving.engine"):
+    with caplog.at_level("ERROR", logger="repro.serving._engine"):
         fut = eng.submit(PropagateRequest(
             y0=np.zeros((x.shape[0], 1), np.float32), n_iters=2))
         assert fut.result(timeout=60) is not None

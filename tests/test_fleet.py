@@ -1,0 +1,294 @@
+"""EngineFleet: tenant routing, DRR fairness, isolation, parity, metrics."""
+import numpy as np
+import pytest
+
+from repro.serving import (DeadlineExceeded, EngineFleet, PropagateEngine,
+                           PropagateRequest)
+
+ITERS = 4  # plenty for parity, cheap enough for tier-1
+
+
+class FakeClock:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(rng, n, c=2, tenant=None, **kw):
+    y0 = (rng.rand(n, c) > 0.8).astype(np.float32)
+    return PropagateRequest(y0, alpha=0.05, n_iters=ITERS, tenant=tenant, **kw)
+
+
+# --------------------------------------------------------------- routing
+def test_routing_by_tenant_and_errors(small_fitted_vdt, rng):
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("a", vdt)
+    fleet.register("b", vdt)
+    assert fleet.tenants() == ("a", "b")
+
+    fa = fleet.submit(_req(rng, n, tenant="a"))
+    fb = fleet.submit(_req(rng, n, tenant="b"))
+    # multi-tenant fleet refuses to guess a route
+    with pytest.raises(ValueError, match="request.tenant is required"):
+        fleet.submit(_req(rng, n))
+    with pytest.raises(ValueError, match="unknown tenant 'zz'"):
+        fleet.submit(_req(rng, n, tenant="zz"))
+    fleet.flush()
+    assert fa.result(timeout=5).shape == (n, 2)
+    assert fb.result(timeout=5).shape == (n, 2)
+    fleet.shutdown()
+
+
+def test_single_tenant_none_routes_to_sole_tenant(small_fitted_vdt, rng):
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    with EngineFleet(start=False, clock=FakeClock()) as fleet:
+        fleet.register("only", vdt)
+        fut = fleet.submit(_req(rng, n))  # tenant=None -> "only"
+        fleet.flush()
+        assert fut.result(timeout=5).shape == (n, 2)
+
+
+def test_register_errors(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("a", vdt)
+    with pytest.raises(ValueError, match="already registered"):
+        fleet.register("a", vdt)
+    with pytest.raises(ValueError, match="weight must be > 0"):
+        fleet.register("b", vdt, weight=0.0)
+    with pytest.raises(ValueError, match="fleet-managed"):
+        fleet.register("b", vdt, start=True)
+    with pytest.raises(ValueError, match="fleet-managed"):
+        fleet.register("b", vdt, clock=FakeClock())
+    fleet.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        fleet.register("c", vdt)
+    with pytest.raises(RuntimeError, match="shut down"):
+        fleet.submit(PropagateRequest(np.zeros((1, 1), np.float32)))
+
+
+def test_quantum_must_be_positive():
+    with pytest.raises(ValueError, match="quantum must be > 0"):
+        EngineFleet(quantum=0.0, start=False)
+
+
+# ----------------------------------------------------------- DRR fairness
+def test_drr_weight_proportional_throughput(small_fitted_vdt, rng):
+    """Sustained all-backlogged load splits 3:1 by weight, exactly.
+
+    quantum*weight credit per round with max_batch=4 microbatches means
+    the gold tenant dispatches 12 requests/round and bronze 4/round while
+    both stay backlogged — lifetime shares converge to the weights and
+    ``fair_share_err`` goes to ~0.
+    """
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock(), quantum=4.0)
+    fleet.register("gold", vdt, weight=3.0, max_batch=4, max_queue=64)
+    fleet.register("bronze", vdt, weight=1.0, max_batch=4, max_queue=64)
+    for _ in range(48):
+        fleet.submit(_req(rng, n, tenant="gold"), block=False)
+        fleet.submit(_req(rng, n, tenant="bronze"), block=False)
+
+    # run rounds only while BOTH tenants stay backlogged: that is the
+    # regime where DRR's share guarantee applies
+    for _ in range(3):
+        assert fleet.step_round() > 0
+    m = fleet.metrics()
+    assert m.rounds == 3
+    assert m.served["gold"] == 36  # 3 rounds * quantum 4 * weight 3
+    assert m.served["bronze"] == 12  # 3 rounds * quantum 4 * weight 1
+    share = m.served["gold"] / (m.served["gold"] + m.served["bronze"])
+    assert abs(share - 0.75) < 0.15 * 0.75
+    assert m.fair_share_err < 0.15
+    fleet.shutdown()  # serves the leftover backlog
+
+
+def test_drr_starvation_bound(small_fitted_vdt, rng):
+    """A tiny-weight tenant still dispatches: its deficit grows every
+    backlogged round, so it is served within max_batch/(quantum*weight)
+    rounds of joining — never starved outright by heavier tenants."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock(), quantum=1.0)
+    fleet.register("heavy", vdt, weight=10.0, max_batch=4, max_queue=256)
+    fleet.register("light", vdt, weight=0.25, max_batch=4, max_queue=256)
+    for _ in range(200):
+        fleet.submit(_req(rng, n, tenant="heavy"), block=False)
+    light_fut = fleet.submit(_req(rng, n, tenant="light"), block=False)
+    # quantum*weight = 0.25/round -> light's single request (cost 1, i.e.
+    # one sub-max_batch dispatch) must go out by round ceil(1/0.25) = 4
+    for _ in range(4):
+        fleet.step_round()
+    assert light_fut.done()
+    assert light_fut.result().shape == (n, 2)
+    fleet.shutdown(wait=False)
+
+
+def test_idle_tenant_banks_no_credit(small_fitted_vdt, rng):
+    """Classic DRR: an empty queue resets the deficit, so a tenant cannot
+    idle through rounds and then burst past its weight share."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock(), quantum=2.0)
+    fleet.register("a", vdt, weight=1.0, max_batch=2, max_queue=64)
+    fleet.register("b", vdt, weight=1.0, max_batch=2, max_queue=64)
+    for _ in range(8):
+        fleet.submit(_req(rng, n, tenant="b"), block=False)
+    for _ in range(10):  # "a" idles; its deficit must stay reset at 0
+        fleet.step_round()
+    assert fleet._tenants["a"].deficit == 0.0
+    fleet.shutdown()
+
+
+# --------------------------------------------------------------- isolation
+def test_tenant_isolation_failures_never_cross(small_fitted_vdt, rng):
+    """Nothing that happens to tenant A's entries — cancellation, EDF
+    expiry — touches tenant B's futures, and vice versa."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    clock = FakeClock()
+    fleet = EngineFleet(start=False, clock=clock)
+    fleet.register("a", vdt, policy="edf")
+    fleet.register("b", vdt)
+
+    doomed = fleet.submit(_req(rng, n, tenant="a", deadline_ms=5.0))
+    cancelled = fleet.submit(_req(rng, n, tenant="a", deadline_ms=1000.0))
+    healthy = fleet.submit(_req(rng, n, tenant="b"))
+    assert cancelled.cancel()
+    clock.advance(0.05)  # expire `doomed` while queued
+    fleet.step_round()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=5)
+    # B's future resolved normally despite A's round of failures
+    assert healthy.result(timeout=5).shape == (n, 2)
+    ma = fleet.metrics().tenants
+    assert ma["a"].expired == 1
+    assert ma["a"].cancelled == 1
+    assert ma["a"].completed == 0
+    assert ma["b"].completed == 1
+    assert ma["b"].expired == 0
+    fleet.shutdown()
+
+
+def test_backpressure_is_per_tenant(small_fitted_vdt, rng):
+    """One tenant hitting QueueFull must not consume another's capacity."""
+    from repro.serving import QueueFull
+
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("tiny", vdt, max_queue=2)
+    fleet.register("roomy", vdt, max_queue=64)
+    fleet.submit(_req(rng, n, tenant="tiny"), block=False)
+    fleet.submit(_req(rng, n, tenant="tiny"), block=False)
+    with pytest.raises(QueueFull):
+        fleet.submit(_req(rng, n, tenant="tiny"), block=False)
+    # roomy is unaffected by tiny's backpressure
+    fut = fleet.submit(_req(rng, n, tenant="roomy"), block=False)
+    fleet.flush()
+    assert fut.result(timeout=5).shape == (n, 2)
+    fleet.shutdown()
+
+
+# ------------------------------------------------------------------ parity
+def test_single_tenant_fleet_bit_identical_to_bare_engine(
+        small_fitted_vdt, rng):
+    """Routing + DRR around one tenant adds NOTHING to the math: answers
+    from a single-tenant fleet are bit-identical to a bare engine fed the
+    same requests in the same order."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    reqs = []
+    r = np.random.RandomState(11)
+    for _ in range(17):  # mixed widths/alphas, incl. sub-bucket widths
+        c = int(r.choice((1, 2, 3, 4, 6)))
+        y0 = (r.rand(n, c) > 0.8).astype(np.float32)
+        reqs.append(PropagateRequest(y0, alpha=float(r.choice((0.01, 0.2))),
+                                     n_iters=ITERS))
+
+    bare = PropagateEngine(vdt, start=False, clock=FakeClock(), max_batch=8)
+    bare_futs = [bare.submit(q) for q in reqs]
+    bare.flush()
+    bare_out = [np.asarray(f.result(timeout=5)) for f in bare_futs]
+    bare.shutdown()
+
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("solo", vdt, max_batch=8)
+    fleet_futs = [fleet.submit(q) for q in reqs]
+    fleet.flush()
+    fleet_out = [np.asarray(f.result(timeout=5)) for f in fleet_futs]
+    fleet.shutdown()
+
+    for a, b in zip(bare_out, fleet_out):
+        assert a.shape == b.shape
+        assert np.array_equal(a, b)  # bit-identical, not merely close
+
+
+# ----------------------------------------------------------------- metrics
+def test_metrics_snapshots_share_no_mutable_state(small_fitted_vdt, rng):
+    """The satellite bugfix contract: fleet metrics are deep-copied and
+    tenant-keyed — mutating a snapshot never corrupts the live scheduler,
+    and two snapshots never alias each other."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("a", vdt, weight=2.0)
+    fleet.register("b", vdt)
+    f = fleet.submit(_req(rng, n, tenant="a"))
+    fleet.step_round()
+    f.result(timeout=5)
+
+    snap1 = fleet.metrics()
+    snap2 = fleet.metrics()
+    # no aliasing between snapshots (per-tenant engine snapshots are
+    # frozen dataclasses of scalars, so the mappings are the mutable part)
+    assert snap1.served is not snap2.served
+    assert snap1.weights is not snap2.weights
+    assert snap1.tenants is not snap2.tenants
+    # ...and mutating a snapshot cannot reach live state
+    snap1.served["a"] = 10**6
+    snap1.weights["a"] = 0.0
+    del snap1.tenants["a"]
+    assert fleet._tenants["a"].served == 1
+    assert fleet._tenants["a"].weight == 2.0
+    snap3 = fleet.metrics()
+    assert snap3.served["a"] == 1
+    assert snap3.weights["a"] == 2.0
+    assert snap3.tenants["a"].completed == 1
+    fleet.shutdown()
+
+
+def test_fair_share_err_nan_until_meaningful(small_fitted_vdt, rng):
+    x, vdt = small_fitted_vdt
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("a", vdt)
+    assert np.isnan(fleet.metrics().fair_share_err)  # single tenant
+    fleet.register("b", vdt)
+    assert np.isnan(fleet.metrics().fair_share_err)  # nothing served yet
+    fleet.shutdown()
+
+
+# ---------------------------------------------------------------- threaded
+def test_background_fleet_serves_end_to_end(small_fitted_vdt, rng):
+    """start=True smoke test on the real clock: the fleet thread routes,
+    schedules, and resolves without manual stepping."""
+    x, vdt = small_fitted_vdt
+    n = x.shape[0]
+    with EngineFleet() as fleet:
+        fleet.register("a", vdt, weight=2.0)
+        fleet.register("b", vdt)
+        futs = [fleet.submit(_req(rng, n, tenant=t))
+                for t in ("a", "b", "a", "b", "a")]
+        outs = [f.result(timeout=30) for f in futs]
+    assert all(o.shape == (n, 2) for o in outs)
+    m = fleet.metrics()
+    assert m.served["a"] + m.served["b"] == 5

@@ -25,9 +25,8 @@ import pytest
 from repro.core.label_prop import (lp_scan_fused, lp_scan_fused_segmented,
                                    lp_scan_leaforder,
                                    lp_scan_leaforder_segmented)
-from repro.serving.engine import PropagateEngine
-from repro.serving.propagate import PropagateRequest
-from repro.serving.queue import QueueEntry, RequestQueue
+from repro.serving import PropagateEngine, PropagateRequest
+from repro.serving._queue import QueueEntry, RequestQueue
 
 ITERS = 13  # covers whole segments, a remainder, and a length-1 tail
 SEGMENTS = (1, 2, 5, ITERS, ITERS + 7)  # incl. seg == and > n_iters

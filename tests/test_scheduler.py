@@ -12,10 +12,9 @@ import numpy as np
 import pytest
 
 from repro.core.label_prop import AUTO_EXACT_MAX_N, route_backend
-from repro.serving.engine import PropagateEngine
-from repro.serving.propagate import PropagateRequest
-from repro.serving.queue import (DISCIPLINES, DeadlineExceeded, QueueEntry,
-                                 RequestQueue)
+from repro.serving import (DeadlineExceeded, PropagateEngine,
+                           PropagateRequest)
+from repro.serving._queue import DISCIPLINES, QueueEntry, RequestQueue
 
 
 class FakeClock:

@@ -1,0 +1,135 @@
+"""Public-API snapshot checker: keep ``repro.serving`` changes deliberate.
+
+The serving tier's public surface — every name in
+``repro.serving.__all__``, its kind, and its callable signature(s) — is
+snapshotted into ``tests/api_snapshot.json``.  CI re-derives the surface
+from the live package and diffs it against the committed snapshot, so the
+blessed API can only change together with an explicit snapshot update in
+the same PR (an intentional, reviewable event) — never as a silent side
+effect of a refactor.
+
+What is snapshotted per exported name:
+
+* its **kind** (``class`` / ``function`` / ``exception`` / ``constant``);
+* for functions: the full signature;
+* for classes: the ``__init__`` signature plus every public method's
+  signature and every public non-callable attribute (dataclass fields,
+  properties);
+* for constants: the repr of the value.
+
+Usage::
+
+    python tools/check_api.py            # verify against the snapshot
+    python tools/check_api.py --update   # rewrite the snapshot (intentional
+                                         # API changes; commit the diff)
+
+Exits non-zero listing every added / removed / changed name.
+``tests/test_api_surface.py`` runs the same check in tier-1 so drift
+surfaces locally before CI.
+"""
+from __future__ import annotations
+
+import argparse
+import inspect
+import json
+import pathlib
+import sys
+
+SNAPSHOT = pathlib.Path(__file__).resolve().parents[1] / "tests" / "api_snapshot.json"
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+
+
+def _describe_class(cls) -> dict:
+    methods: dict[str, str] = {}
+    attributes: list[str] = []
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_") and name != "__init__":
+            continue
+        if isinstance(member, property):
+            attributes.append(name)
+        elif callable(member) or isinstance(member, (staticmethod, classmethod)):
+            fn = member.__func__ if isinstance(
+                member, (staticmethod, classmethod)) else member
+            methods[name] = _signature(fn)
+        else:
+            attributes.append(name)
+    # dataclass fields are part of the contract even when they only exist
+    # as annotations (frozen dataclasses with defaults)
+    for name in getattr(cls, "__dataclass_fields__", {}):
+        if not name.startswith("_") and name not in attributes:
+            attributes.append(name)
+    return {
+        "kind": "exception" if issubclass(cls, BaseException) else "class",
+        "init": methods.pop("__init__", _signature(cls.__init__)),
+        "methods": methods,
+        "attributes": sorted(attributes),
+    }
+
+
+def describe_surface() -> dict:
+    """Derive the live public surface of ``repro.serving``."""
+    import repro.serving as pkg
+
+    surface: dict[str, dict] = {}
+    for name in sorted(pkg.__all__):
+        obj = getattr(pkg, name)
+        if inspect.isclass(obj):
+            surface[name] = _describe_class(obj)
+        elif callable(obj):
+            surface[name] = {"kind": "function", "signature": _signature(obj)}
+        else:
+            surface[name] = {"kind": "constant", "value": repr(obj)}
+    return {"module": "repro.serving", "surface": surface}
+
+
+def diff_surfaces(expected: dict, actual: dict) -> list[str]:
+    """Human-readable drift list; empty when the surfaces match."""
+    problems: list[str] = []
+    exp, act = expected.get("surface", {}), actual.get("surface", {})
+    for name in sorted(set(exp) | set(act)):
+        if name not in act:
+            problems.append(f"removed from public API: {name}")
+        elif name not in exp:
+            problems.append(f"added to public API without snapshot: {name}")
+        elif exp[name] != act[name]:
+            problems.append(
+                f"changed: {name}\n  snapshot: {json.dumps(exp[name], sort_keys=True)}"
+                f"\n  live:     {json.dumps(act[name], sort_keys=True)}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the snapshot from the live surface")
+    args = ap.parse_args(argv)
+
+    actual = describe_surface()
+    if args.update:
+        SNAPSHOT.write_text(json.dumps(actual, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {SNAPSHOT} ({len(actual['surface'])} names)")
+        return 0
+
+    if not SNAPSHOT.exists():
+        print(f"missing snapshot {SNAPSHOT}; run with --update and commit it")
+        return 1
+    expected = json.loads(SNAPSHOT.read_text())
+    problems = diff_surfaces(expected, actual)
+    if problems:
+        print(f"public API drift vs {SNAPSHOT.name} "
+              f"(intentional? rerun with --update and commit):")
+        for p in problems:
+            print(f"- {p}")
+        return 1
+    print(f"public API matches snapshot ({len(actual['surface'])} names)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

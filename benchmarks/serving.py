@@ -105,8 +105,19 @@ TENANT_CLIENTS = 2
 FLEET_PIPELINE = 8
 FLEET_MEASURE_S = 2.0 if TINY else 4.0
 
+# streaming scenario: each mutation cycle deletes STREAM_K rows then inserts
+# STREAM_K fresh points (delete-first, so the freed leaf slots are the
+# insertion headroom and N is constant at every publish — the serving
+# executables never see a new shape), publishes the new epoch, and the cycle
+# wall time is the A/B figure: incremental patch vs full refit of the same
+# final point set.
+STREAM_K = 8
+STREAM_CYCLES = 4 if TINY else 6
+STREAM_CLIENTS = 2
+STREAM_PIPELINE = 4
+
 SCENARIOS = ("uniform", "bursty", "mixed-priority", "deadline-heavy",
-             "multi-tenant", "preempt")
+             "multi-tenant", "preempt", "streaming")
 
 
 def make_requests(rng, count):
@@ -510,6 +521,110 @@ def scenario_preempt(vdt, rng) -> dict:
     return out
 
 
+# --------------------------------------------------------------- streaming
+def scenario_streaming(vdt, rng) -> dict:
+    """Online model updates under closed-loop serving load: patch vs refit.
+
+    Both arms run the IDENTICAL load shape — ``STREAM_CLIENTS`` closed-loop
+    clients keep ``STREAM_PIPELINE`` requests outstanding each while
+    ``STREAM_CYCLES`` mutation cycles (delete ``STREAM_K`` rows, insert
+    ``STREAM_K`` new points, publish the result as a new epoch) run on the
+    benchmark thread — and differ only in how the published model is
+    produced:
+
+    ``patch``  the streaming layer's O(k d log N) incremental insert/delete
+               (``core/streaming.py``), re-optimizing q from patched stats;
+    ``refit``  a from-scratch ``VariationalDualTree.fit`` of the same final
+               point set at the same block budget and bandwidth — what a
+               deployment without incremental updates would have to do.
+
+    The gated figure is ``patch_speedup`` = refit cycle mean / patch cycle
+    mean: the factor by which incremental maintenance beats refitting while
+    traffic keeps flowing.  Epoch correctness rides along: every client
+    request completes (in-flight entries finish on their pinned epoch), and
+    the epoch metrics recorded per arm let the gate's consumers confirm all
+    publishes landed and all old epochs retired.
+    """
+    sigma = float(vdt.sigma)
+    max_blocks = 4 * N
+    width = QOS_WIDTH
+    out = {"cycles": STREAM_CYCLES, "points_per_cycle": 2 * STREAM_K}
+    for mode in ("patch", "refit"):
+        x_cur = np.asarray(vdt.x_rows, np.float32).copy()
+        model = vdt
+        mut_s = []
+        with PropagateEngine(vdt, max_batch=QOS_MAX_BATCH, max_wait_ms=5.0,
+                             max_queue=512) as eng:
+            eng.warmup(widths=(width,), n_iters=(LP_ITERS,))
+            stop = threading.Event()
+            seed = _qos_seed(rng)
+
+            def client(cid):
+                futs = deque()
+                while not stop.is_set():
+                    while len(futs) < STREAM_PIPELINE:
+                        futs.append(eng.submit(PropagateRequest(
+                            seed, alpha=0.05, n_iters=LP_ITERS)))
+                    futs.popleft().result(timeout=600)
+                while futs:
+                    futs.popleft().result(timeout=600)
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(STREAM_CLIENTS)]
+            for t in threads:
+                t.start()
+            time.sleep(0.2)  # let serving traffic get in flight first
+            # one untimed warmup cycle absorbs the arm's one-off compiles
+            # (the streaming q re-optimization / the refit pipeline)
+            for cycle in range(STREAM_CYCLES + 1):
+                rows = np.sort(rng.choice(N, STREAM_K, replace=False))
+                x_new = x_cur[rows] + rng.randn(STREAM_K, x_cur.shape[1]) \
+                    .astype(np.float32) * 0.05
+                t0 = time.perf_counter()
+                if mode == "patch":
+                    upd = model.delete_points(rows)
+                    upd = upd.vdt.insert_points(x_new)
+                    model = upd.vdt
+                    eng.publish(model, patched_points=2 * STREAM_K,
+                                stale_blocks=upd.stale_blocks)
+                else:
+                    x_cur = np.vstack([np.delete(x_cur, rows, axis=0), x_new])
+                    model = VariationalDualTree.fit(
+                        x_cur, max_blocks=max_blocks, sigma=sigma,
+                        learn_sigma=False,
+                        refine_batch=64 if TINY else 256)
+                    eng.publish(model, patched_points=2 * STREAM_K)
+                dt = time.perf_counter() - t0
+                if cycle > 0:
+                    mut_s.append(dt)
+                if mode == "patch":
+                    # keep the host mirror in step for the delete sampling
+                    keep = np.ones(len(x_cur), bool)
+                    keep[rows] = False
+                    x_cur = np.vstack([x_cur[keep], x_new])
+            stop.set()
+            for t in threads:
+                t.join()
+            m = eng.metrics()
+        mean_ms = float(np.mean(mut_s) * 1e3)
+        p95_ms = float(np.percentile(mut_s, 95) * 1e3)
+        out[f"{mode}_mut_mean_ms"] = mean_ms
+        out[f"{mode}_mut_p95_ms"] = p95_ms
+        out[f"{mode}_completed"] = m.completed
+        out[f"{mode}_failed"] = m.failed
+        out[f"{mode}_epochs_published"] = m.epochs_published
+        out[f"{mode}_epochs_retired"] = m.epochs_retired
+        out[f"{mode}_final_live_epochs"] = m.live_epochs
+        emit(f"serving/streaming/{mode}/n={N}/k={STREAM_K}", mean_ms * 1e3,
+             f"mut_mean={mean_ms:.1f}ms mut_p95={p95_ms:.1f}ms "
+             f"completed={m.completed} failed={m.failed} "
+             f"epochs={m.epochs_published}")
+    out["patch_speedup"] = out["refit_mut_mean_ms"] / out["patch_mut_mean_ms"]
+    emit(f"serving/streaming/speedup/n={N}", out["patch_mut_mean_ms"] * 1e3,
+         f"patch_speedup={out['patch_speedup']:.2f}x")
+    return out
+
+
 # ---------------------------------------------------------------- top level
 def run(scenarios=SCENARIOS) -> dict:
     rng = np.random.RandomState(0)
@@ -535,6 +650,8 @@ def run(scenarios=SCENARIOS) -> dict:
         sections["fleet"] = scenario_multi_tenant(vdt, rng)
     if "preempt" in scenarios:
         sections["preempt"] = scenario_preempt(vdt, rng)
+    if "streaming" in scenarios:
+        sections["streaming"] = scenario_streaming(vdt, rng)
 
     # single-scenario runs keep the other sections of an existing artifact
     # so a targeted re-measure never knocks out the gate's other bounds —

@@ -8,7 +8,13 @@ from repro.core.baselines import (
     knn_matvec,
     streaming_exact_matvec,
 )
-from repro.core.blocks import BlockPartition, coarsest_partition, validate_partition
+from repro.core.blocks import (
+    BlockPartition,
+    coarsest_partition,
+    complete_forest,
+    refresh_active,
+    validate_partition,
+)
 from repro.core.divergence import (
     DIVERGENCES,
     Divergence,
@@ -27,23 +33,34 @@ from repro.core.matvec import mpt_matvec
 from repro.core.qopt import QState, optimize_q
 from repro.core.refine import refine_to_budget, refinement_gains
 from repro.core.sigma import fit_sigma_q, sigma_init, sigma_star
+from repro.core.streaming import (
+    CapacityError,
+    StreamUpdate,
+    delete_points,
+    insert_points,
+)
 from repro.core.tree import PartitionTree, build_tree
 from repro.core.vdt import VariationalDualTree
 
 __all__ = [
     "BlockPartition",
+    "CapacityError",
     "DIVERGENCES",
     "Divergence",
     "PartitionTree",
     "QState",
+    "StreamUpdate",
     "VariationalDualTree",
     "build_knn_graph",
     "build_tree",
     "ccr",
     "coarsest_partition",
+    "complete_forest",
+    "delete_points",
     "exact_transition_matrix",
     "fit_sigma_q",
     "get_divergence",
+    "insert_points",
     "knn_matvec",
     "mahalanobis",
     "label_propagate",
@@ -52,6 +69,7 @@ __all__ = [
     "optimize_q",
     "refine_to_budget",
     "refinement_gains",
+    "refresh_active",
     "register_divergence",
     "resolve_divergence",
     "route_backend",

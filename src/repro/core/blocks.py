@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core.tree import PartitionTree, leaf_range, node_level
 
-__all__ = ["BlockPartition", "coarsest_partition", "densify_q", "validate_partition"]
+__all__ = ["BlockPartition", "coarsest_partition", "complete_forest",
+           "densify_q", "refresh_active", "validate_partition"]
 
 
 @dataclasses.dataclass
@@ -31,6 +32,17 @@ class BlockPartition:
     active: np.ndarray   # (cap,) bool
     n: int               # high-water mark (slots [0, n) ever used)
     cap: int
+    # which slots were split into their horizontal children.  With it,
+    # activity is a pure function of the tree's weights: a slot covers real
+    # mass iff it is an unrefined forest leaf with both sides non-ghost, so
+    # ``refresh_active`` can recompute coverage after the streaming layer
+    # patches subtree weights (insert into a formerly all-ghost subtree);
+    # ``complete_forest`` restores children the fit dropped as all-ghost.
+    refined: np.ndarray = None
+
+    def __post_init__(self):
+        if self.refined is None:
+            self.refined = np.zeros(self.cap, bool)
 
     @property
     def n_active(self) -> int:
@@ -47,11 +59,18 @@ class BlockPartition:
             active=np.concatenate([self.active, np.zeros(pad, bool)]),
             n=self.n,
             cap=new_cap,
+            refined=np.concatenate([self.refined, np.zeros(pad, bool)]),
         )
 
     def append_pairs(self, a_new: np.ndarray, b_new: np.ndarray,
-                     mirror_new: np.ndarray) -> np.ndarray:
-        """Append blocks; returns their indices.  Grows capacity if needed."""
+                     mirror_new: np.ndarray,
+                     active_new: np.ndarray | None = None) -> np.ndarray:
+        """Append blocks; returns their indices.  Grows capacity if needed.
+
+        ``active_new`` marks which appended blocks carry real mass right
+        now (default: all) — :func:`complete_forest` uses it to append
+        ghost-sided refinement children inactive.
+        """
         k = len(a_new)
         if self.n + k > self.cap:
             grown = self.grow_to(max(self.cap * 2, self.n + k))
@@ -60,7 +79,8 @@ class BlockPartition:
         self.a[idx] = a_new
         self.b[idx] = b_new
         self.mirror[idx] = mirror_new
-        self.active[idx] = True
+        self.active[idx] = True if active_new is None else active_new
+        self.refined[idx] = False
         self.n += k
         return idx
 
@@ -92,6 +112,60 @@ def coarsest_partition(tree: PartitionTree, cap: int | None = None) -> BlockPart
     w = np.asarray(tree.W)
     bp.active[:n0] = (w[bp.a[:n0]] > 0) & (w[bp.b[:n0]] > 0)
     return bp
+
+
+def complete_forest(bp: BlockPartition) -> BlockPartition:
+    """Copy ``bp`` with every refined slot's missing children restored.
+
+    ``refine_topk`` drops a refined block's child when its kernel side is
+    all-ghost: the child covers no real pair at fit time, and appending it
+    would make the fitted block layout depend on ghost headroom.  Streaming
+    mutations can later put mass INTO such a subtree, so before any
+    weight-driven coverage math (:func:`refresh_active`) the streaming
+    layer appends the missing children here — inactive, with no mirror
+    (refinement children never have one).  Always returns a fresh
+    copy-on-write partition; on an already-complete forest the copy simply
+    has nothing appended, so repeated calls converge after the first.
+    """
+    n = bp.n
+    have = set(zip(bp.a[:n].tolist(), bp.b[:n].tolist()))
+    miss_a, miss_b = [], []
+    for i in np.flatnonzero(bp.refined[:n]):
+        ai, bi = int(bp.a[i]), int(bp.b[i])
+        for bc in (2 * bi + 1, 2 * bi + 2):
+            if (ai, bc) not in have:
+                miss_a.append(ai)
+                miss_b.append(bc)
+    out = BlockPartition(
+        a=bp.a.copy(), b=bp.b.copy(), mirror=bp.mirror.copy(),
+        active=bp.active.copy(), n=bp.n, cap=bp.cap,
+        refined=bp.refined.copy())
+    if miss_a:
+        out.append_pairs(
+            np.asarray(miss_a, np.int32), np.asarray(miss_b, np.int32),
+            np.full(len(miss_a), -1, np.int32),
+            active_new=np.zeros(len(miss_a), bool))
+    return out
+
+
+def refresh_active(bp: BlockPartition, W: np.ndarray) -> np.ndarray:
+    """Recompute ``active`` from per-node weights ``W`` (streaming updates).
+
+    Requires a *complete* refinement forest over the coarsest sibling
+    pairs (see :func:`complete_forest`): every refined slot is present
+    alongside both of its horizontal children, so the unrefined slots tile
+    every off-diagonal leaf pair exactly once geometrically.  A real pair
+    (i, j) therefore lies in exactly one unrefined slot, and that slot has
+    W > 0 on both sides — so ``active = ~refined & (W[a] > 0) & (W[b] > 0)``
+    is the unique correct coverage for ANY weight vector, including ones
+    produced by online insert/delete after the partition was built.
+    Returns the new (cap,) active array without mutating ``bp``.
+    """
+    W = np.asarray(W)
+    n = bp.n
+    active = np.zeros(bp.cap, bool)
+    active[:n] = (~bp.refined[:n]) & (W[bp.a[:n]] > 0) & (W[bp.b[:n]] > 0)
+    return active
 
 
 def validate_partition(bp: BlockPartition, tree: PartitionTree) -> bool:

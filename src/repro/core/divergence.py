@@ -59,6 +59,7 @@ __all__ = [
     "BoundDivergence",
     "DivStats",
     "Divergence",
+    "adopt_bound",
     "bind_divergence",
     "get_divergence",
     "mahalanobis",
@@ -341,6 +342,24 @@ def bind_divergence(divergence, tree: PartitionTree) -> BoundDivergence:
     if hit is not None:
         return hit
     bound = div.bind(tree)
+    _BIND_CACHE[key] = bound
+    weakref.finalize(tree, _BIND_CACHE.pop, key, None)
+    return bound
+
+
+def adopt_bound(tree: PartitionTree, bound: BoundDivergence) -> BoundDivergence:
+    """Seed the bind memo with an externally built :class:`BoundDivergence`.
+
+    The streaming layer (``core/streaming.py``) patches the per-node Bregman
+    stats incrementally instead of recomputing them via :meth:`Divergence.bind`
+    — registering its patched bound here lets every later name-form
+    ``bind_divergence(name, new_tree)`` call (qopt, sigma, refinement) reuse
+    the O(k d log N)-patched stats rather than paying a fresh O(N d) pass.
+    ``bound._tree_ref`` must already point at ``tree``.
+    """
+    if bound._tree_ref is not None and bound._tree_ref() is not tree:
+        raise ValueError("adopt_bound: bound divergence references another tree")
+    key = (bound.name, id(tree))
     _BIND_CACHE[key] = bound
     weakref.finalize(tree, _BIND_CACHE.pop, key, None)
     return bound

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 from repro.core.divergence import bind_divergence
 from repro.core.tree import PartitionTree
 
-__all__ = ["QState", "block_sq_dists", "optimize_q", "lower_bound", "block_log_G"]
+__all__ = ["QState", "block_sq_dists", "optimize_q", "optimize_q_from_g",
+           "lower_bound", "block_log_G"]
 
 _NEG_INF = -jnp.inf
 
@@ -145,18 +146,28 @@ def _optimize_impl(W, log_z, log_part, L: int):
     return log_v, log_zt, bound
 
 
-def optimize_q(
+def optimize_q_from_g(
     tree: PartitionTree,
     a: jax.Array,
     b: jax.Array,
     active: jax.Array,
     sigma: jax.Array,
+    log_g: jax.Array,
     divergence=None,
 ) -> QState:
-    """Optimal block parameters q for the given partition and bandwidth."""
+    """Optimal q given precomputed block log-similarities ``log_g``.
+
+    The d-free tail of :func:`optimize_q`: everything past ``log_g`` is
+    O(|B| + N) segment/level sweeps with no dependence on the data
+    dimension.  The streaming layer (``core/streaming.py``) exploits this —
+    after an insert/delete it recomputes block divergences only for the
+    touched blocks on the host, derives ``log_g`` for the full partition,
+    and re-optimizes globally through this entry point, so the expensive
+    O(|B| d) ``block_log_G`` pass is skipped entirely.  ``divergence`` is
+    only consulted for the bound's log-partition constant.
+    """
     n_nodes = tree.n_nodes
     div = bind_divergence(divergence, tree)
-    log_g = block_log_G(tree, a, b, active, sigma, divergence=div)
     wb = tree.W[b]
     contrib = jnp.where(
         active & (wb > 0), jnp.log(jnp.maximum(wb, 1e-12)) + log_g, _NEG_INF
@@ -170,6 +181,20 @@ def optimize_q(
         _NEG_INF,
     )
     return QState(log_q=log_q, log_v=log_v, log_z=log_z, log_zt=log_zt, bound=bound)
+
+
+def optimize_q(
+    tree: PartitionTree,
+    a: jax.Array,
+    b: jax.Array,
+    active: jax.Array,
+    sigma: jax.Array,
+    divergence=None,
+) -> QState:
+    """Optimal block parameters q for the given partition and bandwidth."""
+    div = bind_divergence(divergence, tree)
+    log_g = block_log_G(tree, a, b, active, sigma, divergence=div)
+    return optimize_q_from_g(tree, a, b, active, sigma, log_g, divergence=div)
 
 
 def lower_bound(

@@ -80,16 +80,33 @@ def refine_topk(
     tree: PartitionTree,
     gains: np.ndarray,
     k: int,
+    stale: np.ndarray | None = None,
 ) -> int:
     """Apply symmetric refinement to the top-k blocks by gain (host-side).
 
     Returns the number of blocks actually refined.  Each refined block is
     deactivated and replaced by its two horizontal children; mirrors of the
     new blocks are wired up when both sides of a symmetric pair refine.
+
+    ``stale`` (optional (>= bp.n,) bool array) marks blocks whose statistics
+    were patched by streaming inserts/deletes since the last refinement:
+    stale blocks with a finite gain are refined FIRST (gain-ordered among
+    themselves), so the block budget is spent where the fitted structure is
+    most out of date.  Refined slots have their stale flag cleared in place.
     """
     g = np.asarray(gains[: bp.n], dtype=np.float64)
     g[~bp.active[: bp.n]] = -np.inf
-    order = np.argsort(-g)
+    if stale is not None:
+        # stale arrays are sized to the partition they were created for;
+        # blocks appended by earlier refinement rounds are implicitly fresh
+        s = np.zeros(bp.n, bool)
+        m = min(len(stale), bp.n)
+        s[:m] = np.asarray(stale[:m], bool)
+        # primary key: stale first; secondary: gain descending (lexsort
+        # reads keys last-to-first)
+        order = np.lexsort((-g, ~s))
+    else:
+        order = np.argsort(-g)
     picked: list[int] = []
     seen: set[int] = set()
     for idx in order[: 4 * k]:
@@ -114,11 +131,19 @@ def refine_topk(
     for i in picked:
         ai, bi = int(bp.a[i]), int(bp.b[i])
         for bc in (2 * bi + 1, 2 * bi + 2):
-            # children whose kernel side is all-ghost cover no real pair
+            # children whose kernel side is all-ghost cover no real pair;
+            # skipping them keeps the fitted block layout (and its log_q
+            # bit pattern) independent of ghost headroom.  The streaming
+            # layer appends them lazily on its copy-on-write partition
+            # (blocks.complete_forest) before any weight-driven coverage
+            # math, so no hole survives an insert into a ghost subtree.
             if w[ai] > 0 and w[bc] > 0:
                 new_a.append(ai)
                 new_b.append(bc)
         bp.active[i] = False
+        bp.refined[i] = True
+        if stale is not None and i < len(stale):
+            stale[i] = False
 
     # refinement children generally have no mirror in B (the paper's
     # "if it also belongs to B" clause) — only coarsest sibling blocks do.
@@ -138,12 +163,18 @@ def refine_to_budget(
     batch: int = 64,
     refit_sigma: bool = False,
     divergence=None,
+    stale: np.ndarray | None = None,
 ) -> Tuple[QState, jax.Array]:
     """Refine until ``n_active >= max_blocks``; returns final (QState, sigma).
 
     Re-optimizes q globally after every batched round (the paper re-optimizes
     after every single refinement; batching amortizes this — measured in
     benchmarks/refinement.py).
+
+    ``stale`` (optional bool array over block slots) prioritizes blocks
+    whose stats were patched by streaming mutations — see
+    :func:`refine_topk`; refined slots are cleared in place so a streaming
+    model's staleness bookkeeping drains as the budget is spent.
     """
     from repro.core.divergence import bind_divergence
     from repro.core.sigma import sigma_star  # local import to avoid cycle
@@ -157,7 +188,7 @@ def refine_to_budget(
             tree, jnp.asarray(bp.a), jnp.asarray(bp.b), jnp.asarray(bp.active),
             qs.log_q, sigma, divergence=div,
         )
-        done = refine_topk(bp, tree, np.asarray(gains), k)
+        done = refine_topk(bp, tree, np.asarray(gains), k, stale=stale)
         if done == 0:
             break
         qs = optimize_q(tree, jnp.asarray(bp.a), jnp.asarray(bp.b),

@@ -160,15 +160,24 @@ def build_tree(
     x: jax.Array,
     weights: Optional[jax.Array] = None,
     power_iters: int = 8,
+    capacity: Optional[int] = None,
 ) -> PartitionTree:
-    """Build the shared partition tree over data points ``x`` (N, d)."""
+    """Build the shared partition tree over data points ``x`` (N, d).
+
+    ``capacity`` (>= N) sizes the leaf level for at least that many points,
+    leaving ``2^L - N`` zero-weight ghost leaves as insertion headroom for
+    online updates (``core/streaming.py``).  The default sizes for N alone
+    — ghost slots then only exist from the power-of-two rounding.
+    """
     x = jnp.asarray(x, dtype=jnp.float32)
     n, d = x.shape
     if weights is None:
         weights = jnp.ones((n,), dtype=x.dtype)
     weights = jnp.asarray(weights, dtype=x.dtype)
 
-    L = max(1, math.ceil(math.log2(max(n, 2))))
+    if capacity is not None and capacity < n:
+        raise ValueError(f"capacity={capacity} < n_points={n}")
+    L = max(1, math.ceil(math.log2(max(n, capacity or 0, 2))))
     np_ = 1 << L
     xp = jnp.pad(x, ((0, np_ - n), (0, 0)))
     wp = jnp.pad(weights, (0, np_ - n))

@@ -65,6 +65,11 @@ class VariationalDualTree:
     # from the tree's leaf-order copy once and reused
     _x_rows_cache: Optional[jax.Array] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    # mutable float64 host mirrors for streaming insert/delete
+    # (core/streaming.py); rides on the newest epoch only and is rebuilt
+    # transparently when absent or stale
+    _stream: Optional[object] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ fit
     @classmethod
@@ -79,6 +84,7 @@ class VariationalDualTree:
         sigma_iters: int = 10,
         power_iters: int = 8,
         divergence="sqeuclidean",
+        capacity: Optional[int] = None,
     ) -> "VariationalDualTree":
         """Build tree + coarsest partition, fit sigma/q, refine to budget.
 
@@ -91,6 +97,10 @@ class VariationalDualTree:
         keeps its role as the kernel temperature; ``sigma_init`` stays the
         Gaussian moment heuristic, which is only a starting scale for the
         eq.-12 alternation.
+
+        ``capacity`` (>= N) reserves ghost leaf headroom for streaming
+        inserts (:meth:`insert_points`); without it the tree only has the
+        power-of-two rounding slack.
         """
         div = div_mod.resolve_divergence(divergence)
         div.validate_domain(x)  # fail fast, before any device work
@@ -98,7 +108,8 @@ class VariationalDualTree:
         x = jnp.asarray(x, jnp.float32)
 
         t0 = time.perf_counter()
-        tree = build_tree(x, weights, power_iters=power_iters)
+        tree = build_tree(x, weights, power_iters=power_iters,
+                          capacity=capacity)
         jax.block_until_ready(tree.W)
         stats.build_tree_s = time.perf_counter() - t0
         # bind via the memo so later public-API calls with the name form
@@ -349,13 +360,34 @@ class VariationalDualTree:
         out = out_leaf[tree.slot_of]
         return out[:, 0] if squeeze else out
 
+    # ------------------------------------------------------------- streaming
+    def insert_points(self, x_new, weights=None):
+        """Insert points online; returns a StreamUpdate with the new epoch.
+
+        O(k d log N) stat patching, no refit — see ``core/streaming.py``.
+        Copy-on-write: ``self`` is untouched; serve from ``update.vdt``.
+        """
+        from repro.core.streaming import insert_points as _ins
+        return _ins(self, x_new, weights=weights)
+
+    def delete_points(self, rows):
+        """Delete points by row id online; see :meth:`insert_points`."""
+        from repro.core.streaming import delete_points as _del
+        return _del(self, rows)
+
     # ------------------------------------------------------------- utilities
     def refine(self, max_blocks: int, batch: int = 64) -> None:
+        stream = self._stream
+        stale = None
+        if stream is not None and stream.owner() is self:
+            # streaming-touched blocks get the budget first
+            stale = stream.stale
         self.qstate, self.sigma = refine_mod.refine_to_budget(
             self.bp, self.tree, self.sigma, max_blocks, batch=batch,
-            divergence=self.bound_divergence,
+            divergence=self.bound_divergence, stale=stale,
         )
         self._serve_cache = None  # a/b/q/active all changed
+        self._stream = None  # refinement regrew the partition; mirrors stale
         self.stats.n_blocks = self.bp.n_active
         self.stats.bound = float(self.qstate.bound)
 

@@ -147,6 +147,26 @@ _log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
+class _Epoch:
+    """One published model version and its serving refcount.
+
+    ``pending`` counts entries accepted at this epoch that have not yet
+    reached a terminal state (result, failure, cancel, expiry).  A
+    non-current epoch whose pending count drains to zero is *retired*:
+    its record — and with it the pinned model and ``FitParams`` — is
+    dropped, and staging buffers sized for a point count no live epoch
+    uses are pruned by the scheduler.  The current epoch is never retired.
+    """
+
+    eid: int
+    vdt: object  # the fitted VariationalDualTree this epoch serves
+    n: int  # its point count (the request-shape contract at this epoch)
+    divergence: str
+    fit_params: FitParams
+    pending: int = 0
+
+
+@dataclasses.dataclass
 class _InFlightScan:
     """A segmented group dispatch suspended (or running) mid-walk.
 
@@ -293,12 +313,24 @@ class PropagateEngine(Engine):
         self._state_lock = threading.Lock()
         self._stop = threading.Event()
         self._closed = False
-        # host staging pool: (batch bucket, width bucket) -> np buffer,
-        # refilled in place every scheduler iteration
-        self._staging: dict[tuple[int, int], np.ndarray] = {}
+        # host staging pool: (n_points, batch bucket, width bucket) -> np
+        # buffer, refilled in place every scheduler iteration.  n_points is
+        # part of the key because streaming publishes can change N; buffers
+        # for point counts no live epoch uses are pruned by the scheduler
+        # once the old epoch drains (_staging_dirty).
+        self._staging: dict[tuple[int, int, int], np.ndarray] = {}
+        self._staging_dirty = False
         self._thread: Optional[threading.Thread] = None
+        # epoch-versioned model records: every queued entry pins the epoch
+        # it was submitted under, so a publish() mid-flight never changes
+        # the bits of already-accepted work (see publish)
         self._fit_params = FitParams(
-            model=vdt, n_points=self.n, divergence=self.divergence)
+            model=vdt, n_points=self.n, divergence=self.divergence, epoch=0)
+        self._epoch_id = 0
+        self._epochs: dict[int, _Epoch] = {0: _Epoch(
+            eid=0, vdt=vdt, n=self.n, divergence=self.divergence,
+            fit_params=self._fit_params)}
+        self._stale_blocks = 0
         if start:
             self._thread = threading.Thread(
                 target=self._loop, name="propagate-engine", daemon=True)
@@ -392,31 +424,49 @@ class PropagateEngine(Engine):
         """
         if self._closed:
             raise RuntimeError("engine is shut down")
-        request = request.validate(n=self.n, buckets=self.buckets,
-                                   default_backend=self.backend)
+        # pin the serving epoch: validate against the current epoch's shape
+        # contract OUTSIDE the lock (validation copies the label matrix),
+        # then re-check under the lock that no publish() landed meanwhile —
+        # if one did, revalidate against the new epoch's N.  The pending
+        # increment happens under the same lock that publishes epochs, so
+        # an accepted entry's epoch can never retire before it resolves.
+        while True:
+            with self._state_lock:
+                eid = self._epoch_id
+                n = self._epochs[eid].n
+            validated = request.validate(n=n, buckets=self.buckets,
+                                         default_backend=self.backend)
+            now = self._clock()
+            with self._state_lock:
+                if self._epoch_id != eid:
+                    continue  # publish raced the validation: revalidate
+                self._epochs[eid].pending += 1
+                seq = self._seq
+                self._seq += 1
+                # EWMA of inter-arrival gaps -> the adaptive linger's rate
+                # estimate; beta 0.25 tracks bursts within ~4 arrivals while
+                # smoothing one-off stalls
+                if self._last_arrival is not None:
+                    gap = max(now - self._last_arrival, 0.0)
+                    if self._ewma_gap_s is None:
+                        self._ewma_gap_s = gap
+                    else:
+                        self._ewma_gap_s += 0.25 * (gap - self._ewma_gap_s)
+                self._last_arrival = now
+            break
         fut: Future = Future()
-        now = self._clock()
-        with self._state_lock:
-            seq = self._seq
-            self._seq += 1
-            # EWMA of inter-arrival gaps -> the adaptive linger's rate
-            # estimate; beta 0.25 tracks bursts within ~4 arrivals while
-            # smoothing one-off stalls
-            if self._last_arrival is not None:
-                gap = max(now - self._last_arrival, 0.0)
-                if self._ewma_gap_s is None:
-                    self._ewma_gap_s = gap
-                else:
-                    self._ewma_gap_s += 0.25 * (gap - self._ewma_gap_s)
-            self._last_arrival = now
         entry = QueueEntry(
-            seq=seq, request=request, future=fut, t_submit=now,
-            priority=request.priority,
-            t_deadline=None if request.deadline_ms is None
-            else now + request.deadline_ms / 1e3)
+            seq=seq, request=validated, future=fut, t_submit=now,
+            priority=validated.priority,
+            t_deadline=None if validated.deadline_ms is None
+            else now + validated.deadline_ms / 1e3,
+            epoch=eid)
         try:
             self._queue.put(entry, block=block, timeout=timeout)
         except QueueFull:
+            with self._state_lock:
+                self._epochs[eid].pending -= 1
+                self._retire_locked()
             self._metrics.count("rejected")
             raise
         if self._closed and fut.cancel():
@@ -437,9 +487,11 @@ class PropagateEngine(Engine):
         thread calls the same code after its batching wait — so tests drive
         it deterministically.
         """
+        self._prune_staging()
         live, cancelled, expired = self._queue.drain(self.max_batch)
         if cancelled:
             self._metrics.count("cancelled", len(cancelled))
+            self._release(cancelled)
         resolved = 0
         for entry in expired:
             # edf fast-fail: the deadline passed while queued, so resolve
@@ -452,6 +504,7 @@ class PropagateEngine(Engine):
                 resolved += 1
             else:
                 self._metrics.count("cancelled")
+        self._release(expired)
         if not live:
             return resolved
         with self._state_lock:
@@ -571,23 +624,34 @@ class PropagateEngine(Engine):
         inside another preemption (unbounded recursion while the original
         suspended walk starves).
         """
-        # group by (n_iters, backend) (+ width bucket unless coalescing) via
-        # the canonical serving-tier key: only requests sharing a scan
-        # length AND a transition matrix can share a dispatch.  Backends
-        # were resolved at submit, so None / "auto" tags that landed on the
-        # same concrete backend coalesce.  Alpha always rides as a traced
+        # group by (epoch, n_iters, backend) (+ width bucket unless
+        # coalescing) via the canonical serving-tier key: only requests
+        # sharing a scan length AND a transition matrix can share a
+        # dispatch — and under streaming updates the transition matrix IS
+        # the epoch, so entries pinned to different epochs never coalesce
+        # (each group dispatches against exactly the model its entries
+        # were submitted under, bit-identically).  Backends were resolved
+        # at submit, so None / "auto" tags that landed on the same
+        # concrete backend coalesce.  Alpha always rides as a traced
         # array and never fragments a group.
-        groups: dict[tuple[int, str, int], list[QueueEntry]] = {}
+        groups: dict[tuple[int, int, str, int], list[QueueEntry]] = {}
+        dead: list[QueueEntry] = []
         for entry in entries:
             if not entry.future.set_running_or_notify_cancel():
                 self._metrics.count("cancelled")  # cancelled post-drain
+                dead.append(entry)
                 continue
-            key = dispatch_group_key(entry.request, self.buckets,
-                                     coalesce_widths=self.coalesce_widths)
+            key = (entry.epoch,) + dispatch_group_key(
+                entry.request, self.buckets,
+                coalesce_widths=self.coalesce_widths)
             groups.setdefault(key, []).append(entry)
+        self._release(dead)
 
         resolved = 0
-        for (n_iters, backend, cb), group in sorted(groups.items()):
+        for (epoch, n_iters, backend, cb), group in sorted(groups.items()):
+            with self._state_lock:
+                ep = self._epochs[epoch]  # pinned: pending > 0 keeps it live
+            vdt, n = ep.vdt, ep.n
             if self.coalesce_widths:
                 cb = max(bucket_width(e.request.y0.shape[1], self.buckets)
                          for e in group)
@@ -596,7 +660,7 @@ class PropagateEngine(Engine):
             try:
                 bb = batch_bucket(len(group), self.max_batch)
                 stack = self._staging.setdefault(
-                    (bb, cb), np.zeros((bb, self.n, cb), np.float32))
+                    (n, bb, cb), np.zeros((bb, n, cb), np.float32))
                 stack.fill(0.0)
                 alphas = np.zeros((bb,), np.float32)  # padding rows: alpha 0
                 for k, entry in enumerate(group):
@@ -604,11 +668,12 @@ class PropagateEngine(Engine):
                     stack[k, :, :y0.shape[1]] = y0
                     alphas[k] = entry.request.alpha
                 out, urgent_resolved = self._propagate_group(
-                    group, stack, alphas, n_iters, backend, preemptible)
+                    group, stack, alphas, n_iters, backend, preemptible, vdt)
             except Exception as exc:  # resolve the group, keep scheduling
                 for entry in group:
                     entry.future.set_exception(exc)
                 self._metrics.count("failed", len(group))
+                self._release(group)
                 resolved += len(group) + urgent_resolved
                 continue
             resolved += urgent_resolved
@@ -630,12 +695,104 @@ class PropagateEngine(Engine):
                     # can tell "meets deadlines" from "merely completes"
                     self._metrics.count("deadline_missed")
             self._metrics.count("completed", len(group))
+            self._release(group)
             resolved += len(group)
         return resolved
 
+    # ------------------------------------------------------ epoch lifecycle
+    def _release(self, entries) -> None:
+        """Drop the epoch pins of terminally-resolved entries; retire drained
+        epochs.  Called exactly once per accepted entry, at whichever path
+        resolves it (result, failure, cancel, or expiry)."""
+        if not entries:
+            return
+        with self._state_lock:
+            for entry in entries:
+                ep = self._epochs.get(entry.epoch)
+                if ep is not None:
+                    ep.pending -= 1
+            self._retire_locked()
+
+    def _retire_locked(self) -> None:
+        """Drop non-current epochs with no pending entries (lock held).
+
+        Retiring releases the epoch's pinned model (its device dispatch
+        buffers go with it once no one else references the tree) and flags
+        the staging pool for pruning — buffers sized for a point count no
+        live epoch serves are freed by the scheduler thread on its next
+        pass (`_prune_staging`), never by whatever submit/publish thread
+        happened to drop the last pin.
+        """
+        dead = [eid for eid, ep in self._epochs.items()
+                if eid != self._epoch_id and ep.pending <= 0]
+        for eid in dead:
+            del self._epochs[eid]
+        if dead:
+            self._metrics.count("epochs_retired", len(dead))
+            self._staging_dirty = True
+
+    def _prune_staging(self) -> None:
+        """Free staging buffers no live epoch can use (scheduler thread
+        only — the staging pool is single-owner dispatch state)."""
+        if not self._staging_dirty:
+            return
+        with self._state_lock:
+            live_n = {ep.n for ep in self._epochs.values()}
+            self._staging_dirty = False
+        for key in [k for k in self._staging if k[0] not in live_n]:
+            del self._staging[key]
+
+    def publish(self, model, *, patched_points: int = 0,
+                stale_blocks: int = 0) -> int:
+        """Swap in a streaming-updated tree as the next epoch; returns it.
+
+        The epoch-versioned model swap behind online inserts/deletes
+        (``core/streaming.py``): ``model`` — typically ``update.vdt`` from
+        :func:`~repro.core.streaming.insert_points` /
+        :func:`~repro.core.streaming.delete_points` — becomes the current
+        epoch atomically with respect to :meth:`submit`.  Entries already
+        queued or in flight stay pinned to their submission epoch and
+        complete **bit-identically** against that tree (streaming
+        mutations are copy-on-write, so the old epoch's arrays are frozen
+        by construction); every submit returning after this call validates
+        against and dispatches on the new epoch.  Old epochs retire as
+        their last entry resolves — their model pin drops and staging
+        buffers sized only for them are pruned — and ``metrics()`` tracks
+        the swap (``epoch``/``live_epochs`` gauges, ``epochs_published`` /
+        ``epochs_retired`` / ``patched_points`` counters).
+
+        ``patched_points`` / ``stale_blocks`` are the streaming update's
+        bookkeeping (``StreamUpdate.patched_points`` /
+        ``StreamUpdate.stale_blocks``), surfaced as metrics so operators
+        can watch model drift and pending refinement debt.  Thread-safe;
+        may be called from any thread, any number of times.
+        """
+        if self._closed:
+            raise RuntimeError("engine is shut down")
+        n = int(model.tree.n_points)
+        divergence = model.divergence_name
+        with self._state_lock:
+            eid = self._epoch_id + 1
+            fp = FitParams(model=model, n_points=n, divergence=divergence,
+                           epoch=eid)
+            self._epochs[eid] = _Epoch(eid=eid, vdt=model, n=n,
+                                       divergence=divergence, fit_params=fp)
+            self._epoch_id = eid
+            self.vdt = model
+            self.n = n
+            self.divergence = divergence
+            self.dispatch_key = f"{self.backend}:{divergence}"
+            self._fit_params = fp
+            self._stale_blocks = int(stale_blocks)
+            self._retire_locked()
+        self._metrics.count("epochs_published")
+        if patched_points:
+            self._metrics.count("patched_points", int(patched_points))
+        return eid
+
     def _propagate_group(self, group: list[QueueEntry], stack: np.ndarray,
                          alphas: np.ndarray, n_iters: int, backend: str,
-                         preemptible: bool):
+                         preemptible: bool, vdt=None):
         """Run one group's LP walk, segmented and preemptible when enabled.
 
         Returns ``(out, urgent_resolved)`` where ``out`` is the group's
@@ -656,10 +813,12 @@ class PropagateEngine(Engine):
         estimated completion of the remaining iterations, the walk yields
         the device to :meth:`_service_urgent` before resuming.
         """
+        if vdt is None:
+            vdt = self.vdt
         seg = self.segment_iters
         if (not preemptible or seg is None or self.policy != "edf"
                 or int(n_iters) <= seg):
-            out = self.vdt.label_propagate(
+            out = vdt.label_propagate(
                 stack, alpha=alphas, n_iters=n_iters, batched=True,
                 backend=backend)
             jax.block_until_ready(out)
@@ -676,7 +835,7 @@ class PropagateEngine(Engine):
         while rec.iters_done < rec.n_iters:
             k = min(seg, rec.n_iters - rec.iters_done)
             t0 = self._clock()
-            rec.carry = self.vdt.label_propagate_resume(
+            rec.carry = vdt.label_propagate_resume(
                 rec.carry, rec.y0, alpha=rec.alphas, n_iters=k,
                 batched=True, backend=rec.backend)
             jax.block_until_ready(rec.carry)
@@ -716,6 +875,7 @@ class PropagateEngine(Engine):
             self.max_batch, horizon)
         if cancelled:
             self._metrics.count("cancelled", len(cancelled))
+            self._release(cancelled)
         resolved = 0
         for entry in expired:
             if entry.future.set_running_or_notify_cancel():
@@ -726,6 +886,7 @@ class PropagateEngine(Engine):
                 resolved += 1
             else:
                 self._metrics.count("cancelled")
+        self._release(expired)
         if not live:
             return resolved
         with self._state_lock:
@@ -741,10 +902,14 @@ class PropagateEngine(Engine):
         with self._state_lock:
             in_flight = self._in_flight
             linger_window_ms = self._linger_window_ms
+            epoch = self._epoch_id
+            stale_blocks = self._stale_blocks
+            live_epochs = len(self._epochs)
         return self._metrics.snapshot(
             queue_depth=len(self._queue), in_flight=in_flight,
             dispatch_key=self.dispatch_key, policy=self.policy,
-            linger_window_ms=linger_window_ms)
+            linger_window_ms=linger_window_ms, epoch=epoch,
+            stale_blocks=stale_blocks, live_epochs=live_epochs)
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; serve (``wait=True``) or cancel the backlog.
@@ -785,3 +950,4 @@ class PropagateEngine(Engine):
                 else:
                     n_cancelled += 1
             self._metrics.count("cancelled", n_cancelled)
+            self._release(live + cancelled + expired)

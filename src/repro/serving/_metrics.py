@@ -68,6 +68,16 @@ class MetricsSnapshot:
     #   scan paused so urgent-deadline arrivals could dispatch first
     preempt_iters: int = 0  # LP iterations still pending at those yields —
     #   the amount of in-flight work each preemption stepped in front of
+    epochs_published: int = 0  # streaming model swaps accepted (publish())
+    epochs_retired: int = 0  # old epochs fully drained and dropped — their
+    #   pinned FitParams and any staging buffers sized for them released
+    patched_points: int = 0  # points inserted/deleted across all publishes
+    epoch: int = 0  # current serving epoch (gauge; 0 = the fitted model)
+    stale_blocks: int = 0  # blocks awaiting refinement priority on the
+    #   current epoch, as reported by the last publish (gauge)
+    live_epochs: int = 1  # epochs still pinned by queued/in-flight entries,
+    #   including the current one (gauge; >1 means an old epoch is still
+    #   draining)
     queue_depth: int = 0  # entries waiting right now (gauge)
     in_flight: int = 0  # drained but not yet resolved (gauge)
     linger_window_ms: float = float("nan")  # current adaptive batching window
@@ -101,6 +111,9 @@ class EngineMetrics:
             scheduler_errors=0,
             preemptions=0,
             preempt_iters=0,
+            epochs_published=0,
+            epochs_retired=0,
+            patched_points=0,
         )
         self._latencies_ms: deque[float] = deque(maxlen=latency_window)
 
@@ -124,6 +137,9 @@ class EngineMetrics:
         dispatch_key: str = "",
         policy: str = "",
         linger_window_ms: float = float("nan"),
+        epoch: int = 0,
+        stale_blocks: int = 0,
+        live_epochs: int = 1,
     ) -> MetricsSnapshot:
         with self._lock:
             lat = sorted(self._latencies_ms)
@@ -135,6 +151,9 @@ class EngineMetrics:
             queue_depth=queue_depth,
             in_flight=in_flight,
             linger_window_ms=linger_window_ms,
+            epoch=epoch,
+            stale_blocks=stale_blocks,
+            live_epochs=live_epochs,
             latency_p50_ms=_quantile(lat, 0.50),
             latency_p95_ms=_quantile(lat, 0.95),
             latency_mean_ms=mean,

@@ -107,6 +107,9 @@ class QueueEntry:
     t_submit: float  # clock() at accept, for latency metrics + aging
     priority: int = 0  # larger = more urgent ("priority" discipline)
     t_deadline: Optional[float] = None  # absolute clock() deadline ("edf")
+    epoch: int = 0  # fitted-model epoch pinned at submit: the entry is
+    #   dispatched against exactly this epoch's tree even if a streaming
+    #   publish lands while it is queued (see PropagateEngine.publish)
 
 
 class RequestQueue:

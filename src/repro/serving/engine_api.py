@@ -62,11 +62,20 @@ class FitParams:
     frozen at fit time).  ``n_points`` and ``divergence`` are the two
     pieces of fitted identity the serving layer itself consumes: the
     request-shape contract and the compile-cache key component.
+
+    ``epoch`` is the model version under streaming updates
+    (``core/streaming.py``): each :meth:`Engine.publish
+    <repro.serving.PropagateEngine.publish>` of an incrementally mutated
+    tree replaces the engine's ``fit_params`` with a NEW immutable
+    instance at the next epoch number — the params object itself never
+    mutates, so anything holding epoch ``e``'s ``FitParams`` keeps
+    serving epoch ``e`` bit-identically.
     """
 
     model: Any
     n_points: int
     divergence: str
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -75,15 +84,18 @@ class DispatchState:
 
     These are the engine's working structures, not copies: ``queue`` is
     the bounded request queue, ``staging`` the pooled host staging buffers
-    keyed by ``(batch bucket, width bucket)``, and ``metrics`` the mutable
-    event sink behind :meth:`Engine.metrics` snapshots.  The contract is
-    ownership, not thread-safety: exactly one scheduler drives this state,
-    and sharing it between schedulers (unlike :class:`FitParams`, which is
-    freely shareable) is a bug.
+    keyed by ``(n_points, batch bucket, width bucket)`` — ``n_points``
+    because epochs published by streaming updates may change the point
+    count, and a buffer sized for one epoch's ``N`` cannot stage
+    another's — and ``metrics`` the mutable event sink behind
+    :meth:`Engine.metrics` snapshots.  The contract is ownership, not
+    thread-safety: exactly one scheduler drives this state, and sharing it
+    between schedulers (unlike :class:`FitParams`, which is freely
+    shareable) is a bug.
     """
 
     queue: Any
-    staging: Mapping[tuple[int, int], np.ndarray]
+    staging: Mapping[tuple[int, int, int], np.ndarray]
     metrics: Any
 
 
@@ -168,6 +180,22 @@ class Engine(abc.ABC):
     @abc.abstractmethod
     def flush(self) -> int:
         """Serve the backlog present at call time; returns futures resolved."""
+
+    # -------------------------------------------------------- streaming
+    def publish(self, model: Any, *, patched_points: int = 0,
+                stale_blocks: int = 0) -> int:
+        """Swap in a streaming-updated model as a new epoch; returns it.
+
+        Optional capability (engines without online updates need not
+        override).  The contract for engines that do: the swap is atomic
+        with respect to :meth:`submit` — every already-queued or in-flight
+        entry completes bit-identically against the epoch it was submitted
+        under, every submit returning after ``publish`` sees the new
+        epoch, and an old epoch's device/staging resources are released
+        once its last entry resolves.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support epoch publishing")
 
     # ------------------------------------------------------ observability
     @abc.abstractmethod

@@ -232,6 +232,38 @@ class EngineFleet:
         self._work.set()
         return fut
 
+    def publish(self, tenant: Optional[str], model, *,
+                patched_points: int = 0, stale_blocks: int = 0) -> int:
+        """Publish a streaming-updated model to ONE tenant's engine.
+
+        Routes to ``tenant``'s engine and returns its new epoch number
+        (``None`` routes to the only tenant of a single-tenant fleet,
+        mirroring :meth:`submit`).  Tenant isolation carries over to
+        epochs: a publish swaps exactly one tenant's serving model —
+        every other tenant's engine keeps its epoch, its pinned tree, and
+        its bit-exact outputs (pinned by ``tests/test_fleet.py``).  The
+        per-engine atomicity contract is
+        :meth:`PropagateEngine.publish
+        <repro.serving.PropagateEngine.publish>`'s own.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("fleet is shut down")
+            if tenant is None:
+                if len(self._tenants) != 1:
+                    raise ValueError(
+                        f"tenant is required on a fleet with "
+                        f"{len(self._tenants)} tenants "
+                        f"(registered: {sorted(self._tenants)})")
+                tenant = next(iter(self._tenants))
+            t = self._tenants.get(tenant)
+            if t is None:
+                raise ValueError(
+                    f"unknown tenant {tenant!r} "
+                    f"(registered: {sorted(self._tenants)})")
+        return t.engine.publish(model, patched_points=patched_points,
+                                stale_blocks=stale_blocks)
+
     # ----------------------------------------------------------- scheduling
     def step_round(self) -> int:
         """One deficit-round-robin pass over the tenants; futures resolved.

@@ -424,6 +424,142 @@ def test_vdt_backend_engines_divergence_keys(positive_data_vdts):
     assert eng_kl.metrics().dispatch_key == "vdt:kl"
 
 
+# --------------------------------------------------------- epoch isolation
+@pytest.fixture(scope="module")
+def streamed_pair(small_fitted_vdt):
+    """(old model, streaming-updated model) with DIFFERENT point counts.
+
+    The changed N makes epoch mixing loud: an old-epoch entry dispatched
+    against the new tree (or vice versa) is a shape error, not a silent
+    numerical drift.
+    """
+    x, vdt = small_fitted_vdt
+    r = np.random.RandomState(31)
+    upd = vdt.delete_points([2, 7, 11])
+    upd = upd.vdt.insert_points(r.randn(5, x.shape[1]).astype(np.float32))
+    return vdt, upd.vdt, upd
+
+
+def _width2_requests(rng, n, count, alphas=(0.01, 0.2)):
+    return [PropagateRequest((rng.rand(n, 2) > 0.8).astype(np.float32),
+                             alpha=float(rng.choice(alphas)), n_iters=ITERS)
+            for _ in range(count)]
+
+
+def test_midflight_publish_preserves_old_epoch_bits(streamed_pair):
+    """The publish atomicity contract, bit-for-bit.
+
+    Entries queued before a publish must resolve EXACTLY as they would on
+    an engine that never saw the publish; entries submitted after it must
+    resolve exactly as on an engine fitted with the new model from the
+    start.  Deterministic scheduler (start=False + flush), so the dispatch
+    grouping is identical across the control and test engines.
+    """
+    vdt0, vdt1, upd = streamed_pair
+    n0, n1 = vdt0.tree.n_points, vdt1.tree.n_points
+    assert n0 != n1
+    reqs_old = _width2_requests(np.random.RandomState(41), n0, 7)
+    reqs_new = _width2_requests(np.random.RandomState(42), n1, 7)
+
+    control_old = PropagateEngine(vdt0, start=False, max_batch=4)
+    want_old = [control_old.submit(q) for q in reqs_old]
+    control_old.flush()
+    want_old = [np.asarray(f.result(timeout=0)) for f in want_old]
+
+    control_new = PropagateEngine(vdt1, start=False, max_batch=4)
+    want_new = [control_new.submit(q) for q in reqs_new]
+    control_new.flush()
+    want_new = [np.asarray(f.result(timeout=0)) for f in want_new]
+
+    eng = PropagateEngine(vdt0, start=False, max_batch=4)
+    futs_old = [eng.submit(q) for q in reqs_old]  # queued on epoch 0
+    eid = eng.publish(vdt1, patched_points=upd.patched_points,
+                      stale_blocks=upd.stale_blocks)
+    assert eid == 1
+    m = eng.metrics()
+    assert m.epoch == 1 and m.epochs_published == 1
+    assert m.live_epochs == 2  # epoch 0 still pinned by the queued entries
+    assert m.patched_points == upd.patched_points
+    assert m.stale_blocks == upd.stale_blocks
+    futs_new = [eng.submit(q) for q in reqs_new]  # land on epoch 1
+    eng.flush()
+
+    for f, w in zip(futs_old, want_old):
+        assert np.array_equal(np.asarray(f.result(timeout=0)), w)
+    for f, w in zip(futs_new, want_new):
+        assert np.array_equal(np.asarray(f.result(timeout=0)), w)
+
+    eng.step()  # retirement already happened; this prunes stale staging
+    m = eng.metrics()
+    assert m.live_epochs == 1 and m.epochs_retired == 1
+    assert all(key[0] == n1 for key in eng.dispatch_state.staging)
+    eng.shutdown()
+
+
+def test_publish_switches_submit_validation(streamed_pair):
+    """Submits racing a publish validate against the epoch they land on."""
+    vdt0, vdt1, _ = streamed_pair
+    n0, n1 = vdt0.tree.n_points, vdt1.tree.n_points
+    eng = PropagateEngine(vdt0, start=False)
+    eng.publish(vdt1)
+    with pytest.raises(ValueError):  # old-N shape no longer valid
+        eng.submit(PropagateRequest(np.zeros((n0, 2), np.float32)))
+    fut = eng.submit(PropagateRequest(np.zeros((n1, 2), np.float32),
+                                      n_iters=2))
+    eng.flush()
+    assert fut.result(timeout=0).shape == (n1, 2)
+    m = eng.metrics()
+    assert m.submitted == 1 and m.completed == 1
+    eng.shutdown()
+
+
+def test_epoch_pins_released_without_dispatch(streamed_pair):
+    """Cancellation and EDF expiry release an old epoch's pins too — an
+    epoch must never stay alive because its entries died off-dispatch."""
+    vdt0, vdt1, _ = streamed_pair
+    n0 = vdt0.tree.n_points
+    clock = _FakeClock()
+    eng = PropagateEngine(vdt0, start=False, policy="edf", clock=clock)
+    y0 = np.zeros((n0, 2), np.float32)
+    doomed = eng.submit(PropagateRequest(y0, n_iters=2, deadline_ms=10.0))
+    dropped = eng.submit(PropagateRequest(y0, n_iters=2))
+    eng.publish(vdt1)
+    assert eng.metrics().live_epochs == 2
+    assert dropped.cancel()
+    clock.advance(1.0)  # expires `doomed` while queued
+    eng.step()
+    m = eng.metrics()
+    assert m.expired == 1 and m.cancelled == 1
+    assert m.live_epochs == 1 and m.epochs_retired == 1
+    eng.shutdown()
+
+
+def test_publish_lifecycle_errors(streamed_pair):
+    vdt0, vdt1, _ = streamed_pair
+    eng = PropagateEngine(vdt0, start=False)
+    eng.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        eng.publish(vdt1)
+
+
+def test_engine_base_publish_is_optional_capability():
+    """Engines that don't override publish() advertise that loudly."""
+    from repro.serving.engine_api import Engine
+
+    class Minimal(Engine):
+        fit_params = dispatch_state = None
+
+        def submit(self, request, *, block=True, timeout=None): ...
+        def warmup(self, widths=None, n_iters=(500,), backends=None): ...
+        def step(self): ...
+        def flush(self): ...
+        def metrics(self): ...
+        def shutdown(self, wait=True): ...
+
+    with pytest.raises(NotImplementedError, match="epoch publishing"):
+        Minimal().publish(object())
+
+
 # --------------------------------------------------------------------- soak
 @pytest.mark.slow
 def test_engine_soak_threaded(separated_clusters_vdt):

@@ -277,6 +277,75 @@ def test_fair_share_err_nan_until_meaningful(small_fitted_vdt, rng):
     fleet.shutdown()
 
 
+# ----------------------------------------------------- per-tenant epochs
+def test_publish_is_per_tenant(small_fitted_vdt, rng):
+    """A streaming publish to one tenant must not move any other tenant's
+    epoch, validation contract, or already-queued answers."""
+    x, vdt0 = small_fitted_vdt
+    n0 = x.shape[0]
+    r = np.random.RandomState(51)
+    upd = vdt0.delete_points([1, 4])
+    vdt1 = upd.vdt.insert_points(
+        r.randn(6, x.shape[1]).astype(np.float32)).vdt
+    n1 = vdt1.tree.n_points
+    assert n1 != n0
+
+    # control: what b's queued request resolves to with no publish anywhere
+    control = EngineFleet(start=False, clock=FakeClock())
+    control.register("b", vdt0)
+    req_b = _req(np.random.RandomState(61), n0, tenant="b")
+    want_b = control.submit(req_b)
+    control.flush()
+    want_b = np.asarray(want_b.result(timeout=5))
+    control.shutdown()
+
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("a", vdt0)
+    fleet.register("b", vdt0)
+    fut_a = fleet.submit(_req(np.random.RandomState(60), n0, tenant="a"))
+    fut_b = fleet.submit(_req(np.random.RandomState(61), n0, tenant="b"))
+
+    eid = fleet.publish("a", vdt1, patched_points=upd.patched_points)
+    assert eid == 1
+    snap = fleet.metrics().tenants
+    assert snap["a"].epoch == 1 and snap["a"].epochs_published == 1
+    assert snap["a"].live_epochs == 2  # a's queued entry pins epoch 0
+    assert snap["b"].epoch == 0 and snap["b"].epochs_published == 0
+
+    # post-publish validation: a wants the new N, b still wants the old one
+    with pytest.raises(ValueError):
+        fleet.submit(_req(rng, n0, tenant="a"))
+    fut_a2 = fleet.submit(_req(np.random.RandomState(62), n1, tenant="a"))
+    with pytest.raises(ValueError):
+        fleet.submit(_req(rng, n1, tenant="b"))
+
+    fleet.flush()
+    assert fut_a.result(timeout=5).shape == (n0, 2)  # old epoch, old shape
+    assert fut_a2.result(timeout=5).shape == (n1, 2)
+    # b's answer is bit-identical to the publish-free control fleet
+    assert np.array_equal(np.asarray(fut_b.result(timeout=5)), want_b)
+
+    snap = fleet.metrics().tenants
+    assert snap["a"].live_epochs == 1 and snap["a"].epochs_retired == 1
+    assert snap["b"].live_epochs == 1 and snap["b"].epochs_retired == 0
+    fleet.shutdown()
+
+
+def test_publish_routing_and_errors(small_fitted_vdt):
+    _, vdt = small_fitted_vdt
+    fleet = EngineFleet(start=False, clock=FakeClock())
+    fleet.register("only", vdt)
+    assert fleet.publish(None, vdt) == 1  # sole tenant: None routes like submit
+    fleet.register("other", vdt)
+    with pytest.raises(ValueError, match="tenant"):
+        fleet.publish(None, vdt)
+    with pytest.raises(ValueError, match="unknown tenant"):
+        fleet.publish("zz", vdt)
+    fleet.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        fleet.publish("only", vdt)
+
+
 # ---------------------------------------------------------------- threaded
 def test_background_fleet_serves_end_to_end(small_fitted_vdt, rng):
     """start=True smoke test on the real clock: the fleet thread routes,

@@ -1,0 +1,328 @@
+"""Incremental-vs-refit differential harness for the streaming VDT layer.
+
+The core claim of ``core/streaming.py`` is an *equivalence*: a model mutated
+through O(k d log N) insert/delete patches must be indistinguishable from a
+model whose subtree statistics, block coverage, and q distribution were
+recomputed from scratch on the final point set.  Every test here is an
+instance of that claim:
+
+* ``recompute(model)`` — the in-structure oracle (same tree, same block
+  partition, full non-incremental stats + q optimization) — must agree with
+  the patched model on stats, log_q, dense Q, and label propagation, for
+  EVERY registered divergence and for interleaved insert/delete sequences.
+* The ``exact`` LP backend depends only on ``x_rows`` and sigma, so the
+  mutated model must match a true ``VariationalDualTree.fit`` of the final
+  point set bit-for-bit on the exact backend — pinning the row-compaction
+  ordering contract, not just the approximation.
+* Edge cases: deletes that empty a whole subtree (its stats must hit exact
+  zero and its blocks must deactivate), inserts into the emptied region
+  (blocks must reactivate), a model shrunk to a single point, capacity
+  exhaustion, and copy-on-write isolation of the source epoch.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CapacityError
+from repro.core.streaming import recompute
+from repro.core.vdt import VariationalDualTree
+
+DIVERGENCES = ("sqeuclidean", "kl", "itakura_saito", "mahalanobis")
+
+N0 = 37          # odd: the fitted tree starts with ghost leaves of its own
+DIM = 3
+CAPACITY = 64
+MAX_BLOCKS = 120
+
+
+def make_x(rng, k, divergence, scale=1.0):
+    x = rng.randn(k, DIM).astype(np.float32) * scale
+    if divergence in ("kl", "itakura_saito"):
+        x = np.abs(x) + 0.1  # positive-domain divergences
+    return x.astype(np.float32)
+
+
+@pytest.fixture(scope="module", params=DIVERGENCES)
+def fitted(request):
+    """(divergence, rng, fitted model with insert headroom) per divergence."""
+    div = request.param
+    rng = np.random.RandomState(11)
+    x = make_x(rng, N0, div)
+    vdt = VariationalDualTree.fit(x, max_blocks=MAX_BLOCKS, capacity=CAPACITY,
+                                  divergence=div)
+    return div, rng, vdt
+
+
+def assert_matches_recompute(vdt, lp_atol=2e-3, unit_weights=True):
+    """The differential oracle: patched model == from-scratch recompute."""
+    ora = recompute(vdt)
+    n = vdt.tree.n_points
+
+    # subtree statistics (float64 patches vs float32 bottom-up sums)
+    w_scale = max(1.0, float(np.abs(np.asarray(ora.tree.W)).max()))
+    for name in ("W", "S1", "S2"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(vdt.tree, name)),
+            np.asarray(getattr(ora.tree, name)),
+            rtol=2e-4, atol=1e-3 * w_scale, err_msg=f"stat {name} diverged")
+
+    # block coverage is a pure function of the weights: must match exactly
+    np.testing.assert_array_equal(vdt.bp.active, ora.bp.active)
+
+    # the incremental q re-optimization must land on the same optimum
+    mask = np.isfinite(np.asarray(ora.qstate.log_q))
+    np.testing.assert_array_equal(np.isfinite(np.asarray(vdt.qstate.log_q)),
+                                  mask)
+    np.testing.assert_allclose(
+        np.asarray(vdt.qstate.log_q)[mask], np.asarray(ora.qstate.log_q)[mask],
+        rtol=1e-3, atol=5e-4, err_msg="log_q diverged from recompute")
+
+    # dense Q equal to the oracle's; rows are stochastic for unit weights
+    # (a weighted point's outgoing mass scales with its weight)
+    q_mut, q_ora = vdt.dense_q(), ora.dense_q()
+    if unit_weights:
+        np.testing.assert_allclose(q_mut.sum(1), np.ones(n), atol=1e-3)
+    np.testing.assert_allclose(q_mut, q_ora, atol=1e-4)
+
+    # label propagation on the approximate backend
+    r = np.random.RandomState(5)
+    y0 = (r.rand(n, 2) > 0.8).astype(np.float32)
+    lp_mut = np.asarray(vdt.label_propagate(y0, alpha=0.1, n_iters=8))
+    lp_ora = np.asarray(ora.label_propagate(y0, alpha=0.1, n_iters=8))
+    np.testing.assert_allclose(lp_mut, lp_ora, atol=lp_atol)
+
+
+def apply_ops(vdt, rng, div, ops, x_mirror):
+    """Run an insert/delete script, maintaining a host row mirror."""
+    for kind, k in ops:
+        n = vdt.tree.n_points
+        if kind == "ins":
+            x_new = make_x(rng, k, div)
+            upd = vdt.insert_points(x_new)
+            assert np.array_equal(upd.rows, np.arange(n, n + k))
+            assert upd.row_map is None
+            x_mirror = np.vstack([x_mirror, x_new])
+        else:
+            rows = np.sort(rng.choice(n, k, replace=False))
+            upd = vdt.delete_points(rows)
+            assert np.array_equal(upd.rows, rows)
+            # row_map: -1 at deleted rows, order-preserving elsewhere
+            rm = upd.row_map
+            assert np.all(rm[rows] == -1)
+            keep = np.setdiff1d(np.arange(n), rows)
+            assert np.array_equal(rm[keep], np.arange(keep.size))
+            x_mirror = np.delete(x_mirror, rows, axis=0)
+        assert upd.patched_points == k
+        vdt = upd.vdt
+        # row bookkeeping is exact at every step, not just at the end
+        np.testing.assert_array_equal(np.asarray(vdt.x_rows), x_mirror)
+    return vdt, x_mirror
+
+
+# ------------------------------------------------------- the differential
+def test_interleaved_ops_match_recompute(fitted):
+    """Interleaved inserts/deletes == from-scratch recompute, per divergence."""
+    div, rng, vdt0 = fitted
+    x0 = np.asarray(vdt0.x_rows).copy()
+    ops = [("ins", 6), ("del", 9), ("ins", 4), ("del", 5), ("ins", 7),
+           ("del", 3), ("ins", 2)]
+    vdt, x_mirror = apply_ops(vdt0, np.random.RandomState(23), div, ops, x0)
+    assert vdt.tree.n_points == N0 + 6 - 9 + 4 - 5 + 7 - 3 + 2
+    assert_matches_recompute(vdt)
+
+
+def test_single_insert_and_delete_match_recompute(fitted):
+    """One-op mutations (the common serving case) hit the same optimum."""
+    div, rng, vdt0 = fitted
+    upd = vdt0.insert_points(make_x(np.random.RandomState(1), 5, div))
+    assert upd.touched_blocks > 0 and upd.stale_blocks >= upd.touched_blocks
+    assert_matches_recompute(upd.vdt)
+
+    upd2 = upd.vdt.delete_points([0, 3, N0 + 2])
+    assert_matches_recompute(upd2.vdt)
+
+
+def test_exact_backend_matches_true_refit(fitted):
+    """Row compaction makes the mutated model's exact-LP equal a real refit.
+
+    The ``exact`` backend uses only ``x_rows`` and sigma, so if the
+    streaming layer keeps surviving rows in relative order and appends
+    inserts, the mutated model and ``fit()`` on the final point set are the
+    SAME exact computation.
+    """
+    div, rng, vdt0 = fitted
+    sigma = float(vdt0.sigma)
+    rng2 = np.random.RandomState(31)
+    upd = vdt0.delete_points(np.sort(rng2.choice(N0, 8, replace=False)))
+    x_new = make_x(rng2, 6, div)
+    vdt = upd.vdt.insert_points(x_new).vdt
+
+    x_final = np.asarray(vdt.x_rows)
+    refit = VariationalDualTree.fit(x_final, max_blocks=MAX_BLOCKS,
+                                    sigma=sigma, learn_sigma=False,
+                                    divergence=div)
+    n = x_final.shape[0]
+    y0 = (np.random.RandomState(9).rand(n, 2) > 0.8).astype(np.float32)
+    lp_mut = np.asarray(vdt.label_propagate(y0, alpha=0.1, n_iters=6,
+                                            backend="exact"))
+    lp_ref = np.asarray(refit.label_propagate(y0, alpha=0.1, n_iters=6,
+                                              backend="exact"))
+    np.testing.assert_allclose(lp_mut, lp_ref, atol=1e-5)
+    # and the approximate backend stays close to its own refit
+    lp_vdt = np.asarray(vdt.label_propagate(y0, alpha=0.1, n_iters=6))
+    assert np.all(np.isfinite(lp_vdt))
+
+
+def test_copy_on_write_isolation(fitted):
+    """Mutations never touch the source epoch: old model stays bit-identical."""
+    div, rng, vdt0 = fitted
+    y0 = (np.random.RandomState(2).rand(N0, 2) > 0.8).astype(np.float32)
+    before_lp = np.asarray(vdt0.label_propagate(y0, alpha=0.1, n_iters=6)).copy()
+    before_x = np.asarray(vdt0.x_rows).copy()
+    before_q = np.asarray(vdt0.qstate.log_q).copy()
+
+    upd = vdt0.insert_points(make_x(np.random.RandomState(3), 4, div))
+    upd.vdt.delete_points([1, 2])
+
+    assert vdt0.tree.n_points == N0
+    np.testing.assert_array_equal(np.asarray(vdt0.x_rows), before_x)
+    np.testing.assert_array_equal(np.asarray(vdt0.qstate.log_q), before_q)
+    after_lp = np.asarray(vdt0.label_propagate(y0, alpha=0.1, n_iters=6))
+    np.testing.assert_array_equal(after_lp, before_lp)
+
+
+# ------------------------------------------------------------- edge cases
+def test_delete_empties_subtree_exactly():
+    """Deleting every point under a node zeroes its stats with NO residue."""
+    rng = np.random.RandomState(7)
+    x = make_x(rng, 24, "sqeuclidean")
+    vdt = VariationalDualTree.fit(x, max_blocks=80, capacity=32)
+    tree = vdt.tree
+    L = tree.L
+    # rows living in the leftmost quarter of the leaf array share the
+    # depth-2 ancestor node 3 (heap ids: root 0, children 2k+1 / 2k+2)
+    slot_of = np.asarray(tree.slot_of)
+    quarter = tree.n_leaves // 4
+    rows = np.flatnonzero(slot_of < quarter)
+    assert rows.size > 0
+    upd = vdt.delete_points(rows)
+    new = upd.vdt
+
+    assert float(np.asarray(new.tree.W)[3]) == 0.0
+    assert np.all(np.asarray(new.tree.S1)[3] == 0.0)
+    assert float(np.asarray(new.tree.S2)[3]) == 0.0
+    # blocks with an emptied side are provably massless -> deactivated
+    a, b, act = new.bp.a[:new.bp.n], new.bp.b[:new.bp.n], new.bp.active[:new.bp.n]
+    w = np.asarray(new.tree.W)
+    assert not np.any(act & ((w[a] == 0) | (w[b] == 0)))
+    assert new.bp.n_active < vdt.bp.n_active
+    assert_matches_recompute(new)
+
+    # ...and inserting into the freed region reactivates coverage
+    x_back = make_x(np.random.RandomState(8), rows.size, "sqeuclidean")
+    upd2 = new.insert_points(x_back)
+    assert upd2.vdt.bp.n_active > new.bp.n_active
+    assert_matches_recompute(upd2.vdt)
+
+
+def test_delete_to_single_point_then_refill():
+    """A singleton model stays serveable; refilling from it stays exact."""
+    rng = np.random.RandomState(13)
+    x = make_x(rng, 9, "sqeuclidean")
+    vdt = VariationalDualTree.fit(x, max_blocks=40, capacity=16)
+    upd = vdt.delete_points(np.arange(8))
+    one = upd.vdt
+    assert one.tree.n_points == 1
+    lp = np.asarray(one.label_propagate(np.ones((1, 2), np.float32),
+                                        alpha=0.1, n_iters=4))
+    assert np.all(np.isfinite(lp))
+
+    upd2 = one.insert_points(make_x(rng, 10, "sqeuclidean"))
+    assert upd2.vdt.tree.n_points == 11
+    assert_matches_recompute(upd2.vdt)
+
+
+def test_delete_all_rejected():
+    rng = np.random.RandomState(17)
+    vdt = VariationalDualTree.fit(make_x(rng, 6, "sqeuclidean"), max_blocks=20)
+    with pytest.raises(ValueError, match="at least one"):
+        vdt.delete_points(np.arange(6))
+
+
+def test_capacity_error_names_remedy():
+    rng = np.random.RandomState(19)
+    vdt = VariationalDualTree.fit(make_x(rng, 8, "sqeuclidean"), max_blocks=20)
+    free = vdt.tree.n_leaves - 8
+    with pytest.raises(CapacityError, match="capacity"):
+        vdt.insert_points(make_x(rng, free + 1, "sqeuclidean"))
+    # deleting frees exactly that much headroom again
+    upd = vdt.delete_points([0, 1])
+    upd.vdt.insert_points(make_x(rng, free + 2, "sqeuclidean"))
+
+
+def test_validation_errors():
+    rng = np.random.RandomState(21)
+    vdt = VariationalDualTree.fit(make_x(rng, 8, "sqeuclidean"),
+                                  max_blocks=20, capacity=16)
+    with pytest.raises(ValueError, match="points"):
+        vdt.insert_points(np.zeros((2, DIM + 1), np.float32))
+    with pytest.raises(ValueError, match="positive"):
+        vdt.insert_points(make_x(rng, 2, "sqeuclidean"), weights=[1.0, -1.0])
+    with pytest.raises(ValueError, match="row ids"):
+        vdt.delete_points([0, 99])
+    with pytest.raises(ValueError, match="empty"):
+        vdt.delete_points([])
+    # positive-domain divergence rejects out-of-domain inserts up front
+    kl = VariationalDualTree.fit(make_x(rng, 8, "kl"), max_blocks=20,
+                                 capacity=16, divergence="kl")
+    with pytest.raises(ValueError):
+        kl.insert_points(np.full((1, DIM), -1.0, np.float32))
+
+
+def test_refine_spends_budget_on_stale_blocks_first():
+    """Post-mutation refinement prioritizes the patched region."""
+    rng = np.random.RandomState(29)
+    x = make_x(rng, 40, "sqeuclidean")
+    vdt = VariationalDualTree.fit(x, max_blocks=90, capacity=64)
+    upd = vdt.insert_points(make_x(rng, 6, "sqeuclidean", scale=3.0))
+    new = upd.vdt
+    assert upd.stale_blocks > 0
+    before_blocks, before_bound = new.n_blocks, new.bound
+    new.refine(max_blocks=before_blocks + 8)
+    assert new.n_blocks > before_blocks
+    assert np.isfinite(new.bound) and new.bound >= before_bound - 1e-3
+    # refinement regrew the partition: mirrors were dropped, and the next
+    # mutation transparently rebuilds them
+    assert_matches_recompute(new.delete_points([0]).vdt)
+
+
+def test_insert_weights_carried():
+    rng = np.random.RandomState(37)
+    vdt = VariationalDualTree.fit(make_x(rng, 12, "sqeuclidean"),
+                                  max_blocks=40, capacity=32)
+    x_new = make_x(rng, 3, "sqeuclidean")
+    upd = vdt.insert_points(x_new, weights=[2.0, 0.5, 3.0])
+    w_leaf = np.asarray(upd.vdt.tree.w_leaf)
+    slot_of = np.asarray(upd.vdt.tree.slot_of)
+    np.testing.assert_allclose(w_leaf[slot_of[upd.rows]], [2.0, 0.5, 3.0])
+    assert_matches_recompute(upd.vdt, unit_weights=False)
+
+
+# ------------------------------------------------------------------- soak
+@pytest.mark.slow
+@pytest.mark.parametrize("div", DIVERGENCES)
+def test_streaming_soak(div):
+    """Long interleaved churn per divergence: drift must not accumulate."""
+    rng = np.random.RandomState(41)
+    x = make_x(rng, 96, div)
+    vdt = VariationalDualTree.fit(x, max_blocks=320, capacity=192,
+                                  divergence=div)
+    x_mirror = np.asarray(vdt.x_rows).copy()
+    ops = []
+    for _ in range(30):
+        ops.append(("ins", int(rng.randint(1, 9))))
+        ops.append(("del", int(rng.randint(1, 9))))
+    vdt, x_mirror = apply_ops(vdt, rng, div, ops, x_mirror)
+    assert_matches_recompute(vdt, lp_atol=5e-3)
+    jax.clear_caches()

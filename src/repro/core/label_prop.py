@@ -54,43 +54,76 @@ from repro.core.matvec import mpt_matvec_leaforder
 __all__ = ["one_hot_labels", "label_propagate", "lp_scan_leaforder",
            "lp_scan_leaforder_resume", "lp_scan_leaforder_segmented",
            "lp_scan_fused", "lp_scan_fused_resume", "lp_scan_fused_segmented",
-           "route_backend", "AUTO_EXACT_MAX_N", "CONCRETE_BACKENDS",
-           "ccr"]
+           "route_backend", "AUTO_EXACT_MAX_N", "AUTO_GRF_MAX_DENSITY",
+           "AUTO_GRF_MIN_RTOL", "CONCRETE_BACKENDS", "ccr"]
 
 # `backend="auto"` routes to the exact eq.-3 scan at or below this many
 # points: one exact LP iteration is O(N^2 d) streamed, which at this scale
 # costs about the same as the VDT dispatch overhead, so small problems might
 # as well get the ground-truth walk.  Above it, auto traffic rides the
-# fitted O(|B|) approximation.
+# fitted O(|B|) approximation.  The boundary is INCLUSIVE (n == 1024 is
+# exact, n == 1025 is vdt — pinned by tests/test_grf.py), and callers with
+# different exact-kernel budgets may override it per call via
+# ``route_backend(..., auto_exact_max_n=...)``.
 AUTO_EXACT_MAX_N = 1024
 
-# the two concrete scan implementations every routing tag resolves to —
+# `backend="auto"` considers the GRF walker estimator only when BOTH hold
+# (boundaries inclusive):
+#   * the graph is sparse enough that walkers beat dense/streamed linear
+#     algebra — edge fraction nnz/N^2 at most AUTO_GRF_MAX_DENSITY (the
+#     per-step costs cross around deg ~= 0.05 N: one walker step is O(m)
+#     per node vs O(deg) per node for a sparse matvec with m ~ 100s);
+#   * the request's accuracy target tolerates Monte-Carlo noise — rtol at
+#     least AUTO_GRF_MIN_RTOL, since an m-walker mean's relative error is
+#     ~1/sqrt(m) (CLT) and rtol below 5% would demand m > 400 walkers,
+#     past which exact/vdt wins (see core.grf.walkers_for_rtol).
+# Requests that don't state density or rtol never auto-route to grf.
+AUTO_GRF_MAX_DENSITY = 0.05
+AUTO_GRF_MIN_RTOL = 0.05
+
+# the three concrete scan implementations every routing tag resolves to —
 # the serving tier's validate/group-key/warmup paths all share this
 # vocabulary, so a new backend lands in exactly one place
-CONCRETE_BACKENDS = ("vdt", "exact")
+CONCRETE_BACKENDS = ("vdt", "exact", "grf")
 
 
 def route_backend(requested, default: str = "vdt", *, n=None,
+                  density=None, rtol=None,
                   auto_exact_max_n: int = AUTO_EXACT_MAX_N) -> str:
     """Resolve a per-request backend tag to a concrete scan implementation.
 
-    The single routing decision behind the engine's exact/VDT hybrid (and
+    The single routing decision behind the engine's hybrid serving (and
     ``propagate_many``): every request carries ``backend`` as ``None`` (use
-    the caller's ``default``), ``"vdt"`` / ``"exact"`` (explicit — e.g.
-    validation-tagged traffic pinned to the exact eq.-3 walk), or
-    ``"auto"`` (exact iff ``n <= auto_exact_max_n``, VDT otherwise).
-    Returns ``"vdt"`` or ``"exact"``; raises ``ValueError`` on anything
-    else so bad tags fail at submit time, not at dispatch.
+    the caller's ``default``), an explicit concrete tag (``"vdt"`` /
+    ``"exact"`` / ``"grf"``), or ``"auto"``.  ``"auto"`` resolves by the
+    documented rule, in order:
+
+    1. ``"grf"`` iff the graph is sparse AND the accuracy target tolerates
+       Monte-Carlo noise: ``density <= AUTO_GRF_MAX_DENSITY`` and
+       ``rtol >= AUTO_GRF_MIN_RTOL`` (both boundaries inclusive; a
+       ``None`` density or rtol disqualifies grf — no stated sparsity or
+       tolerance means no walker routing);
+    2. else ``"exact"`` iff ``n <= auto_exact_max_n`` (inclusive;
+       override the cutoff per call for a different exact-kernel budget);
+    3. else ``"vdt"``.
+
+    Returns a member of :data:`CONCRETE_BACKENDS`; raises ``ValueError``
+    on anything else so bad tags fail at submit time, not at dispatch.
     """
     if requested is None:
         requested = default
     if requested == "auto":
+        if (density is not None and rtol is not None
+                and float(density) <= AUTO_GRF_MAX_DENSITY
+                and float(rtol) >= AUTO_GRF_MIN_RTOL):
+            return "grf"
         if n is None:
             raise ValueError("backend='auto' routing needs the problem size n")
         return "exact" if int(n) <= int(auto_exact_max_n) else "vdt"
     if requested not in CONCRETE_BACKENDS:
         raise ValueError(
-            f"backend must be 'vdt', 'exact', 'auto' or None, got {requested!r}")
+            f"backend must be one of {CONCRETE_BACKENDS}, 'auto' or None, "
+            f"got {requested!r}")
     return requested
 
 

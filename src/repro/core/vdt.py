@@ -70,6 +70,12 @@ class VariationalDualTree:
     # transparently when absent or stale
     _stream: Optional[object] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    # CSR transition graph over the fitted points for the GRF backend
+    # (core/grf.py), built from the dense eq.-3 kernel once and cached —
+    # epochs are copy-on-write, so the cache is stable for this model's
+    # lifetime and every dispatch against it walks identical bits
+    _grf_cache: Optional[object] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ fit
     @classmethod
@@ -211,9 +217,27 @@ class VariationalDualTree:
             self.tree, a, b, active, self.qstate.log_q, ys,
         )
 
+    def grf_graph(self):
+        """The CSR transition graph the GRF backend walks, cached.
+
+        Bridged from the fitted point cloud via the dense eq.-3 kernel
+        (``core.grf.CSRGraph.from_points``), so GRF estimates are unbiased
+        for exactly the matrix the ``"exact"`` backend serves.  Raises
+        ``ValueError`` for positive-domain divergences (KL,
+        Itakura-Saito) — see ``core/grf.py``.
+        """
+        from repro.core import grf as grf_mod
+
+        if self._grf_cache is None:
+            self._grf_cache = grf_mod.CSRGraph.from_points(
+                self.x_rows, float(self.sigma),
+                divergence=self.bound_divergence.div)
+        return self._grf_cache
+
     def label_propagate(self, y0, alpha=0.01, n_iters: int = 500,
                         batched: Optional[bool] = None,
-                        backend: str = "vdt"):
+                        backend: str = "vdt",
+                        n_walkers: Optional[int] = None, seed: int = 0):
         """Label propagation (eq. 15) from seed labels ``y0``.
 
         ``y0`` may be a single ``(N, C)`` label matrix or a stacked
@@ -242,13 +266,31 @@ class VariationalDualTree:
           pairwise-distance/softmax work once per iteration for ALL
           requests.  O(N^2 d) per iteration — the accuracy-validation path,
           not the large-N serving path.
+        * ``"grf"`` — the graph-random-features walker estimator
+          (``core.grf.grf_label_propagate``) over the cached
+          :meth:`grf_graph`: an unbiased Monte-Carlo estimate of the same
+          eq.-15 walk, O(N * n_walkers) per iteration.  ``n_walkers``
+          (default ``core.grf.DEFAULT_N_WALKERS``) is the accuracy dial —
+          relative error ~ ``1/sqrt(n_walkers)`` — and ``seed`` makes the
+          estimate deterministic (bit-identical per ``(seed, shapes)``).
+          Both are ignored by the other backends.
         """
         y0 = jnp.asarray(y0)
         if not jnp.issubdtype(y0.dtype, jnp.floating):
             y0 = y0.astype(jnp.float32)
-        if backend not in ("vdt", "exact"):
+        if backend not in ("vdt", "exact", "grf"):
             raise ValueError(
-                f"backend must be 'vdt' or 'exact', got {backend!r}")
+                f"backend must be 'vdt', 'exact' or 'grf', got {backend!r}")
+        if backend == "grf":
+            from repro.core import grf as grf_mod
+
+            if batched and y0.ndim != 3:
+                raise ValueError(
+                    f"batched label_propagate wants (batch, N, C), got {y0.shape}")
+            return grf_mod.grf_label_propagate(
+                self.grf_graph(), y0, alpha=alpha, n_iters=int(n_iters),
+                n_walkers=int(n_walkers or grf_mod.DEFAULT_N_WALKERS),
+                seed=int(seed))
         if backend == "exact":
             if batched and y0.ndim != 3:
                 raise ValueError(
@@ -313,6 +355,14 @@ class VariationalDualTree:
         if y.shape != y0.shape:
             raise ValueError(
                 f"carry shape {y.shape} must match seed shape {y0.shape}")
+        if backend == "grf":
+            # the MC estimator is a weighted sum over walk prefixes, not a
+            # fixed-point iteration: a carry is not its complete state, so
+            # there is no exact resume primitive — grf dispatches are
+            # always monolithic (the serving engine never segments them)
+            raise ValueError(
+                "backend='grf' does not support segmented resume; "
+                "grf scans dispatch monolithically")
         if backend not in ("vdt", "exact"):
             raise ValueError(
                 f"backend must be 'vdt' or 'exact', got {backend!r}")

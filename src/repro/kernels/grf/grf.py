@@ -1,0 +1,88 @@
+"""Pallas load-weighted feature-product kernel for the GRF estimator.
+
+Reduces one step's walker population to its Monte-Carlo feature estimate
+
+    out[i, :] = (1 / m) * sum_w load[i, w] * Y[pos[i, w], :]
+
+i.e. the walker mean that estimates one row block of ``P^t @ Y``.  The
+gather ``Y[pos]`` is phrased as a **weighted one-hot matmul**: each column
+tile ``j`` builds a ``(block_s * m, block_n)`` selector holding ``load``
+where ``pos`` falls inside the tile and 0 elsewhere, multiplies it against
+the resident ``(block_n, C)`` value tile on the MXU, and accumulates —
+no dynamic-gather primitive in the kernel body, which TPU Pallas does not
+vectorize.  Grid ``(S / block_s, N / block_n)``, column tiles innermost;
+tile ``j == 0`` zeroes the output block and every tile accumulates into it.
+
+Out-of-tile positions contribute exactly 0, so padding rows (``load = 0``)
+and padded value rows (never indexed: ``pos < N``) are both inert.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["grf_feature_kernel"]
+
+
+def _kernel(pos_ref, load_ref, y_ref, o_ref, *, block_n: int, inv_m: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    pos = pos_ref[...]                                  # (bs, m) int32
+    load = load_ref[...]                                # (bs, m) f32
+    bs, m = pos.shape
+    local = pos.reshape(bs * m, 1) - j * block_n
+    # TPU wants >= 2-D iota: broadcasted_iota over the tile's column axis
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bs * m, block_n), 1)
+    onehot = jnp.where(local == cols, load.reshape(bs * m, 1),
+                       jnp.float32(0.0))
+    part = jnp.dot(onehot, y_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)  # (bs*m, C)
+    o_ref[...] += inv_m * part.reshape(bs, m, -1).sum(axis=1)
+
+
+def grf_feature_kernel(pos, load, y, *, block_s: int = 128,
+                       block_n: int = 128, interpret: bool = False):
+    """``(S, m)`` walker positions/loads x ``(N, C)`` values -> ``(S, C)``.
+
+    Pads S up to ``block_s`` (zero load — inert) and N up to ``block_n``
+    (padded value rows are never selected); slices the padding back off.
+    """
+    s, m = pos.shape
+    n, c = y.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    load = jnp.asarray(load, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    bs = min(block_s, _round_up(s, 8))
+    bn = min(block_n, _round_up(n, 128))
+    sp = _round_up(s, bs)
+    np_ = _round_up(n, bn)
+    if sp != s:
+        pos = jnp.pad(pos, ((0, sp - s), (0, 0)))
+        load = jnp.pad(load, ((0, sp - s), (0, 0)))
+    if np_ != n:
+        y = jnp.pad(y, ((0, np_ - n), (0, 0)))
+    grid = (sp // bs, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_n=bn, inv_m=1.0 / m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, c), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, c), jnp.float32),
+        interpret=interpret,
+    )(pos, load, y)
+    return out[:s]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the GRF walker/feature kernels.
+
+Mirrors ``kernels/fused_lp/ops.py``: every wrapper falls back to Pallas
+interpret mode off-TPU so the same call sites run (slowly but correctly)
+on CPU test environments.  ``impl="ref"`` selects the take-based jnp
+oracle instead of the Pallas one-hot kernel — same contract, used by the
+statistical harness's hot loops and by benchmarks that want kernel-free
+timings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.grf.grf import grf_feature_kernel
+from repro.kernels.grf.ref import grf_feature_matvec_ref
+
+__all__ = ["grf_feature_matvec"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_n"))
+def _feature_impl(pos, load, y, block_s: int, block_n: int):
+    return grf_feature_kernel(pos, load, y, block_s=block_s,
+                              block_n=block_n, interpret=_interpret())
+
+
+_feature_ref = jax.jit(grf_feature_matvec_ref)
+
+
+def grf_feature_matvec(pos, load, y, *, block_s: int = 128,
+                       block_n: int = 128, impl=None):
+    """Walker-mean feature product ``(S, m) x (N, C) -> (S, C)``.
+
+    ``impl=None`` (default) runs the Pallas one-hot-matmul kernel
+    (interpret mode off-TPU); ``impl="ref"`` the jnp oracle.
+    """
+    if impl == "ref":
+        return _feature_ref(pos, load, y)
+    if impl is not None:
+        raise ValueError(f"impl must be None or 'ref', got {impl!r}")
+    return _feature_impl(pos, load, y, block_s, block_n)

@@ -74,8 +74,21 @@ class PropagateRequest:
       Other disciplines still count late completions in the metrics.
     * ``backend`` — per-request transition-matrix routing: ``None`` (the
       serving default), ``"vdt"``, ``"exact"`` (e.g. validation-tagged
-      traffic pinned to the ground-truth eq.-3 walk), or ``"auto"``
-      (exact for small N); see :func:`repro.core.label_prop.route_backend`.
+      traffic pinned to the ground-truth eq.-3 walk), ``"grf"`` (the
+      Monte-Carlo walker estimator), or ``"auto"``; see
+      :func:`repro.core.label_prop.route_backend`.
+    * ``rtol`` — the request's relative accuracy target, in ``(0, 1]``.
+      Consumed two ways: ``backend="auto"`` routing (a loose rtol on a
+      sparse graph permits grf), and — on a grf dispatch without an
+      explicit ``n_walkers`` — the walker budget is sized from it via
+      :func:`repro.core.grf.walkers_for_rtol` (CLT: ``m ~= 1/rtol^2``).
+      Advisory for the deterministic backends.
+    * ``n_walkers`` — explicit grf walker budget (overrides ``rtol``
+      sizing and the engine default).  Deliberately NOT part of the
+      dispatch group key: a grf group dispatches at the MAX budget over
+      its members — more walkers strictly reduces every member's variance,
+      exactly like width coalescing padding to the largest bucket — so
+      heterogeneous budgets never fragment a batch.
     * ``tenant`` — multi-tenant routing tag, consumed by
       :class:`~repro.serving.fleet.EngineFleet`: which registered tenant
       (fitted tree + engine + fair-queueing weight) serves this request.
@@ -89,6 +102,8 @@ class PropagateRequest:
     deadline_ms: Optional[float] = None
     backend: Optional[str] = None
     tenant: Optional[str] = None
+    rtol: Optional[float] = None
+    n_walkers: Optional[int] = None
 
     def validate(self, *, n: int, buckets: Sequence[int],
                  default_backend: str = "vdt") -> "PropagateRequest":
@@ -105,7 +120,13 @@ class PropagateRequest:
           combination of the walk and the seed, anything outside diverges;
         * ``n_iters`` must be a positive integer;
         * ``backend`` must resolve via
-          :func:`repro.core.label_prop.route_backend` (unknown tags raise);
+          :func:`repro.core.label_prop.route_backend` (unknown tags
+          raise).  ``rtol`` feeds the ``"auto"`` rule, but an engine
+          serves the *complete* fitted kernel graph (density ~1), so auto
+          traffic resolves to exact/vdt — grf serving is an explicit
+          per-request or engine-default tag;
+        * ``rtol``, when given, must be finite and in ``(0, 1]``;
+        * ``n_walkers``, when given, must be a positive integer;
         * ``deadline_ms``, when given, must be ``> 0``.
 
         Returns a new :class:`PropagateRequest` with the backend resolved
@@ -127,7 +148,19 @@ class PropagateRequest:
         n_iters = int(self.n_iters)
         if n_iters < 1:
             raise ValueError(f"n_iters must be >= 1, got {n_iters}")
-        backend = route_backend(self.backend, default_backend, n=n)
+        rtol = self.rtol
+        if rtol is not None:
+            rtol = float(rtol)
+            if not (math.isfinite(rtol) and 0.0 < rtol <= 1.0):
+                raise ValueError(
+                    f"rtol must be finite and in (0, 1], got {rtol}")
+        n_walkers = self.n_walkers
+        if n_walkers is not None:
+            n_walkers = int(n_walkers)
+            if n_walkers < 1:
+                raise ValueError(f"n_walkers must be >= 1, got {n_walkers}")
+        backend = route_backend(self.backend, default_backend, n=n,
+                                rtol=rtol)
         deadline_ms = self.deadline_ms
         if deadline_ms is not None:
             deadline_ms = float(deadline_ms)
@@ -135,7 +168,8 @@ class PropagateRequest:
                 raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         return PropagateRequest(
             y0=y0, alpha=alpha, n_iters=n_iters, priority=int(self.priority),
-            deadline_ms=deadline_ms, backend=backend, tenant=self.tenant)
+            deadline_ms=deadline_ms, backend=backend, tenant=self.tenant,
+            rtol=rtol, n_walkers=n_walkers)
 
 
 def bucket_width(c: int, buckets: Sequence[int]) -> int:

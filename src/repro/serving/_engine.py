@@ -56,10 +56,16 @@ distance-reusing fused kernel (``core.label_prop.lp_scan_fused``): the
 coalesced group shares one streaming pass per LP iteration, so the
 pairwise-distance/softmax work — the reason exact LP was ever expensive to
 batch — is paid once per iteration for the whole group instead of once per
-request.  The engine-level ``backend`` is only the *default*: each
+request.  ``"grf"`` serves the graph-random-features walker estimator
+(``core/grf.py``): an unbiased Monte-Carlo estimate of the same eq.-15
+walk whose per-iteration cost is O(N * n_walkers), with the walker budget
+as a per-request accuracy dial (explicit ``n_walkers``, or CLT-sized from
+``rtol``) — grf groups dispatch at the max budget over their members and
+always monolithically (no resume primitive), deterministically per
+``grf_seed``.  The engine-level ``backend`` is only the *default*: each
 ``PropagateRequest(backend=...)`` may override it (``"exact"`` for
 accuracy-validation traffic, ``"auto"`` for route-by-size), making one
-engine an exact/VDT hybrid.
+engine a multi-backend hybrid.
 
 Preemptible dispatch
 --------------------
@@ -217,9 +223,27 @@ class PropagateEngine(Engine):
                  widths share one dispatch (default; see module docstring).
     backend:     default transition-matrix backend — ``"vdt"`` (fitted
                  approximation), ``"exact"`` (streamed exact P via the
-                 distance-reusing fused kernel) or ``"auto"`` (exact for
-                 small N).  Individual requests may override it; see
-                 *Backends* in the module docstring.
+                 distance-reusing fused kernel), ``"grf"`` (the
+                 Monte-Carlo walker estimator over the fitted kernel
+                 graph) or ``"auto"`` (exact for small N; never grf on an
+                 engine, whose complete kernel graph is dense).
+                 Individual requests may override it; see *Backends* in
+                 the module docstring.
+    n_walkers:   default grf walker budget per dispatch.  A grf group
+                 dispatches at the max over its members' budgets (an
+                 explicit ``PropagateRequest.n_walkers``, else the CLT
+                 sizing ``walkers_for_rtol(rtol)`` when the request
+                 states an accuracy target, else this default) — walker
+                 count never fragments a batch, mirroring width
+                 coalescing.  ``metrics().n_walkers`` reports the budget
+                 of the most recent grf dispatch.
+    grf_seed:    PRNG seed for grf dispatches.  Together with the pinned
+                 epoch's model it fully determines the walks, so repeated
+                 dispatches of the same group are bit-identical — the
+                 same determinism contract the other backends get for
+                 free.  grf scans never segment (no resume primitive for
+                 a Monte-Carlo series), so they dispatch monolithically
+                 even under ``policy="edf"`` + ``segment_iters``.
     policy:      queue discipline — ``"fifo"`` (default, submission order),
                  ``"priority"`` (highest ``PropagateRequest.priority``
                  first with starvation-bounded aging) or ``"edf"``
@@ -260,6 +284,8 @@ class PropagateEngine(Engine):
         buckets: Sequence[int] = DEFAULT_WIDTH_BUCKETS,
         coalesce_widths: bool = True,
         backend: str = "vdt",
+        n_walkers: int = 64,
+        grf_seed: int = 0,
         policy: str = "fifo",
         aging_ms: float = 500.0,
         adaptive_linger: bool = True,
@@ -275,7 +301,12 @@ class PropagateEngine(Engine):
         if segment_iters is not None and segment_iters < 1:
             raise ValueError(
                 f"segment_iters must be >= 1 or None, got {segment_iters}")
+        if n_walkers < 1:
+            raise ValueError(f"n_walkers must be >= 1, got {n_walkers}")
         self.vdt = vdt
+        self.n_walkers = int(n_walkers)
+        self.grf_seed = int(grf_seed)
+        self._last_n_walkers = 0  # gauge: budget of the latest grf dispatch
         self.n = int(vdt.tree.n_points)
         # the engine-level backend is the per-request DEFAULT; "auto"
         # resolves here against the fitted problem size (route_backend also
@@ -385,16 +416,20 @@ class PropagateEngine(Engine):
         count = 0
         for be in (backends or (self.backend,)):
             be = route_backend(be, self.backend, n=self.n)
+            kw = ({"n_walkers": self.n_walkers, "seed": self.grf_seed}
+                  if be == "grf" else {})
             for ni in n_iters:
                 for cb in cbs:
                     for bb in bbs:
                         z = np.zeros((bb, self.n, cb), np.float32)
                         out = self.vdt.label_propagate(
                             z, alpha=np.zeros((bb,), np.float32),
-                            n_iters=int(ni), batched=True, backend=be)
+                            n_iters=int(ni), batched=True, backend=be, **kw)
                         jax.block_until_ready(out)
                         count += 1
-                        if (self.segment_iters is not None
+                        # grf has no resume executable to warm: it always
+                        # dispatches monolithically
+                        if (self.segment_iters is not None and be != "grf"
                                 and int(ni) > self.segment_iters):
                             out = self.vdt.label_propagate_resume(
                                 z, z, alpha=np.zeros((bb,), np.float32),
@@ -655,6 +690,17 @@ class PropagateEngine(Engine):
             if self.coalesce_widths:
                 cb = max(bucket_width(e.request.y0.shape[1], self.buckets)
                          for e in group)
+            n_walkers = None
+            if backend == "grf":
+                # max-over-group walker budget: more walkers strictly
+                # tightens every member's estimate, so the hungriest
+                # request sets the batch budget (the width-coalescing
+                # argument applied to accuracy) — walker count never
+                # fragments a group
+                n_walkers = max(self._walker_budget(e.request)
+                                for e in group)
+                with self._state_lock:
+                    self._last_n_walkers = n_walkers
             group.sort(key=lambda e: e.seq)  # deterministic batch layout
             urgent_resolved = 0
             try:
@@ -668,7 +714,8 @@ class PropagateEngine(Engine):
                     stack[k, :, :y0.shape[1]] = y0
                     alphas[k] = entry.request.alpha
                 out, urgent_resolved = self._propagate_group(
-                    group, stack, alphas, n_iters, backend, preemptible, vdt)
+                    group, stack, alphas, n_iters, backend, preemptible,
+                    vdt, n_walkers=n_walkers)
             except Exception as exc:  # resolve the group, keep scheduling
                 for entry in group:
                     entry.future.set_exception(exc)
@@ -790,9 +837,19 @@ class PropagateEngine(Engine):
             self._metrics.count("patched_points", int(patched_points))
         return eid
 
+    def _walker_budget(self, request: PropagateRequest) -> int:
+        """One grf request's walker budget: explicit > rtol-sized > default."""
+        if request.n_walkers is not None:
+            return int(request.n_walkers)
+        if request.rtol is not None:
+            from repro.core.grf import walkers_for_rtol
+
+            return walkers_for_rtol(request.rtol)
+        return self.n_walkers
+
     def _propagate_group(self, group: list[QueueEntry], stack: np.ndarray,
                          alphas: np.ndarray, n_iters: int, backend: str,
-                         preemptible: bool, vdt=None):
+                         preemptible: bool, vdt=None, n_walkers=None):
         """Run one group's LP walk, segmented and preemptible when enabled.
 
         Returns ``(out, urgent_resolved)`` where ``out`` is the group's
@@ -816,6 +873,14 @@ class PropagateEngine(Engine):
         if vdt is None:
             vdt = self.vdt
         seg = self.segment_iters
+        if backend == "grf":
+            # always monolithic: the MC series estimator has no exact
+            # resume primitive (label_propagate_resume rejects grf)
+            out = vdt.label_propagate(
+                stack, alpha=alphas, n_iters=n_iters, batched=True,
+                backend="grf", n_walkers=n_walkers, seed=self.grf_seed)
+            jax.block_until_ready(out)
+            return out, 0
         if (not preemptible or seg is None or self.policy != "edf"
                 or int(n_iters) <= seg):
             out = vdt.label_propagate(
@@ -905,11 +970,13 @@ class PropagateEngine(Engine):
             epoch = self._epoch_id
             stale_blocks = self._stale_blocks
             live_epochs = len(self._epochs)
+            n_walkers = self._last_n_walkers
         return self._metrics.snapshot(
             queue_depth=len(self._queue), in_flight=in_flight,
             dispatch_key=self.dispatch_key, policy=self.policy,
             linger_window_ms=linger_window_ms, epoch=epoch,
-            stale_blocks=stale_blocks, live_epochs=live_epochs)
+            stale_blocks=stale_blocks, live_epochs=live_epochs,
+            n_walkers=n_walkers)
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; serve (``wait=True``) or cancel the backlog.

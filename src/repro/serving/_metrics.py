@@ -78,6 +78,10 @@ class MetricsSnapshot:
     live_epochs: int = 1  # epochs still pinned by queued/in-flight entries,
     #   including the current one (gauge; >1 means an old epoch is still
     #   draining)
+    n_walkers: int = 0  # walker budget of the most recent grf dispatch
+    #   (gauge; 0 = no grf group dispatched yet).  A grf group dispatches
+    #   at the MAX budget over its members, so this is the budget actual
+    #   device work ran at — the accuracy-vs-latency dial operators watch
     queue_depth: int = 0  # entries waiting right now (gauge)
     in_flight: int = 0  # drained but not yet resolved (gauge)
     linger_window_ms: float = float("nan")  # current adaptive batching window
@@ -140,6 +144,7 @@ class EngineMetrics:
         epoch: int = 0,
         stale_blocks: int = 0,
         live_epochs: int = 1,
+        n_walkers: int = 0,
     ) -> MetricsSnapshot:
         with self._lock:
             lat = sorted(self._latencies_ms)
@@ -154,6 +159,7 @@ class EngineMetrics:
             epoch=epoch,
             stale_blocks=stale_blocks,
             live_epochs=live_epochs,
+            n_walkers=n_walkers,
             latency_p50_ms=_quantile(lat, 0.50),
             latency_p95_ms=_quantile(lat, 0.95),
             latency_mean_ms=mean,

@@ -1,0 +1,90 @@
+"""CLT-derived assertion helpers for stochastic estimators.
+
+The GRF harness's bounds are *derived*, never hand-tuned: every tolerance
+comes from the estimator's own measured spread and a fixed z-score, so a
+test can only pass because the estimator is actually unbiased at the
+stated confidence — not because someone widened an atol until CI went
+green.  With fixed seeds the draws are deterministic, so a passing bound
+stays passing (no flaky tolerances); Z = 5 puts the per-element false-trip
+probability under 6e-7, far below the element counts these tests check.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+# five standard errors: per-element false-positive probability < 5.8e-7,
+# small against the O(1e4) elements a harness run checks, while a real
+# bias of even one standard error trips it with near certainty as m grows
+Z_SCORE = 5.0
+
+# numeric floor added to every CLT bound: float32 accumulation error can
+# dominate when the sampled spread is ~0 (e.g. deterministic columns),
+# where a pure z * sem bound would demand exact bit equality
+NUMERIC_FLOOR = 1e-5
+
+
+def assert_unbiased(samples, oracle, *, axis: int = 1, z: float = Z_SCORE,
+                    floor: float = NUMERIC_FLOOR, what: str = "estimate"):
+    """Assert ``mean(samples, axis)`` is within ``z`` SEMs of ``oracle``.
+
+    ``samples`` holds independent replicates along ``axis`` (walkers or
+    seeds); the bound is elementwise ``|mean - oracle| <= z * sem + floor``
+    with ``sem = std / sqrt(reps)`` estimated from the same samples (reps
+    large enough that the Student-t correction is negligible).
+    """
+    samples = np.asarray(samples, np.float64)
+    oracle = np.asarray(oracle, np.float64)
+    reps = samples.shape[axis]
+    assert reps >= 16, f"need >= 16 replicates for a stable SEM, got {reps}"
+    mean = samples.mean(axis=axis)
+    sem = samples.std(axis=axis, ddof=1) / math.sqrt(reps)
+    err = np.abs(mean - oracle)
+    bound = z * sem + floor
+    worst = np.max(err - bound)
+    assert (err <= bound).all(), (
+        f"{what} biased beyond {z} SEMs: worst excess {worst:.3e} "
+        f"(max |err| {err.max():.3e}, max sem {sem.max():.3e}, "
+        f"reps {reps})")
+
+
+def variance_ratio_floor(m_small: int, m_big: int, reps: int,
+                         z: float = Z_SCORE) -> float:
+    """Smallest MSE ratio ``mse(m_small) / mse(m_big)`` the CLT guarantees.
+
+    An unbiased MC mean over ``m`` draws has MSE proportional to ``1/m``,
+    so the true ratio is ``m_big / m_small``.  Each MSE is *estimated*
+    from ``reps`` independent replicates, and a mean of ``reps`` squared
+    errors concentrates within a relative ``z * sqrt(2 / reps)`` of its
+    expectation (chi-square CLT; conservative — it ignores the additional
+    averaging over elements).  Dividing the true ratio by the two-sided
+    slack gives a floor that only genuine variance non-decay can breach.
+    """
+    slack = 1.0 + z * math.sqrt(2.0 / reps)
+    return (m_big / m_small) / (slack * slack)
+
+
+def assert_variance_decays(sq_errs_small, sq_errs_big, *, m_small: int,
+                           m_big: int, z: float = Z_SCORE):
+    """Assert the MSE shrinks like 1/m between two walker budgets.
+
+    ``sq_errs_*`` are per-replicate mean squared errors against the exact
+    oracle (one scalar per seed).  The ratio must clear
+    :func:`variance_ratio_floor` — derived from the replicate count, not
+    tuned.
+    """
+    sq_errs_small = np.asarray(sq_errs_small, np.float64)
+    sq_errs_big = np.asarray(sq_errs_big, np.float64)
+    reps = min(sq_errs_small.size, sq_errs_big.size)
+    mse_small = sq_errs_small.mean()
+    mse_big = sq_errs_big.mean()
+    floor = variance_ratio_floor(m_small, m_big, reps, z=z)
+    assert floor > 1.0, (
+        f"test design error: floor {floor:.2f} <= 1 cannot distinguish "
+        f"decay from noise; raise m_big/m_small or reps")
+    ratio = mse_small / mse_big
+    assert ratio >= floor, (
+        f"variance did not decay with walkers: mse({m_small}w) / "
+        f"mse({m_big}w) = {ratio:.2f} < CLT floor {floor:.2f} "
+        f"(true ratio would be {m_big / m_small:.1f})")

@@ -496,6 +496,55 @@ def test_midflight_publish_preserves_old_epoch_bits(streamed_pair):
     eng.shutdown()
 
 
+def test_midflight_publish_grf_pinned_epoch_bits(streamed_pair):
+    """Epoch isolation holds for the stochastic backend too: grf entries
+    queued before a publish resolve bit-identically to an engine that
+    never saw the publish.  This is stronger than the deterministic
+    backends' version — the walk set depends on the graph (cached per
+    model instance) AND the engine's grf_seed, so any epoch mixing would
+    change the sampled paths, not just drift numerics."""
+    vdt0, vdt1, upd = streamed_pair
+    n0, n1 = vdt0.tree.n_points, vdt1.tree.n_points
+
+    def grf_reqs(seed, n):
+        rng = np.random.RandomState(seed)
+        return [PropagateRequest((rng.rand(n, 2) > 0.8).astype(np.float32),
+                                 alpha=float(rng.choice((0.01, 0.2))),
+                                 n_iters=6, backend="grf")
+                for _ in range(5)]
+
+    reqs_old, reqs_new = grf_reqs(51, n0), grf_reqs(52, n1)
+    kw = dict(start=False, max_batch=4, n_walkers=8, grf_seed=7)
+
+    control_old = PropagateEngine(vdt0, **kw)
+    want_old = [control_old.submit(q) for q in reqs_old]
+    control_old.flush()
+    want_old = [np.asarray(f.result(timeout=0)) for f in want_old]
+
+    control_new = PropagateEngine(vdt1, **kw)
+    want_new = [control_new.submit(q) for q in reqs_new]
+    control_new.flush()
+    want_new = [np.asarray(f.result(timeout=0)) for f in want_new]
+
+    eng = PropagateEngine(vdt0, **kw)
+    futs_old = [eng.submit(q) for q in reqs_old]  # pinned to epoch 0
+    eng.publish(vdt1, patched_points=upd.patched_points,
+                stale_blocks=upd.stale_blocks)
+    futs_new = [eng.submit(q) for q in reqs_new]  # land on epoch 1
+    eng.flush()
+
+    for f, w in zip(futs_old, want_old):
+        assert np.array_equal(np.asarray(f.result(timeout=0)), w)
+    for f, w in zip(futs_new, want_new):
+        assert np.array_equal(np.asarray(f.result(timeout=0)), w)
+    m = eng.metrics()
+    assert m.live_epochs == 1 and m.epochs_retired == 1
+    assert m.n_walkers == 8
+    eng.shutdown()
+    control_old.shutdown()
+    control_new.shutdown()
+
+
 def test_publish_switches_submit_validation(streamed_pair):
     """Submits racing a publish validate against the epoch they land on."""
     vdt0, vdt1, _ = streamed_pair

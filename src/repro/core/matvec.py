@@ -90,6 +90,16 @@ def collect_up(y_leaf: jax.Array, L: int) -> jax.Array:
     cur = y_leaf
     for _ in range(L):
         cur = cur.reshape(*cur.shape[:-2], -1, 2, cur.shape[-1]).sum(axis=-2)
+        # Pin the summation tree: each level must be computed FROM the
+        # materialized level below it.  Without the barrier XLA is free to
+        # fuse the tiny top levels into one reduction straight from a lower
+        # level with a different association order, and which rewrite fires
+        # depends on the surrounding program — so the same tree summed
+        # inside two different jits (e.g. the single-device scan vs the
+        # sharded engine's shard_map body) can disagree by ulps.  The
+        # serving tier promises cross-engine *bit* parity, so the order is
+        # part of the contract.
+        cur = jax.lax.optimization_barrier(cur)
         levels.append(cur)
     return jnp.concatenate(levels[::-1], axis=-2)
 

@@ -19,9 +19,42 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["ShardCtx", "use_ctx", "shard_act", "param_shardings", "current_ctx"]
+__all__ = ["ShardCtx", "use_ctx", "shard_act", "param_shardings",
+           "current_ctx", "leaf_mesh", "leaf_sharding"]
 
 _tls = threading.local()
+
+
+# ---------------------------------------------------------------- VDT serving
+# The sharded serving engine (serving/_sharded.py) partitions LEAF-ORDER
+# arrays — label stacks (n_leaves, K), the leaf mask — row-wise over a 1-D
+# device mesh.  A complete perfect-binary-tree level always has a
+# power-of-two row count, so a power-of-two device count divides it evenly
+# and every device owns one aligned subtree of the partition tree.
+
+LEAF_AXIS = "leaves"
+
+
+def leaf_mesh(devices=None, *, axis: str = LEAF_AXIS) -> Mesh:
+    """1-D mesh over ``devices`` (default: all) for leaf-order partitioning.
+
+    The device count must be a power of two: each device then owns a
+    whole subtree of the (perfect binary) partition tree, which is what
+    makes the sharded CollectUp/DistributeDown decomposition exact.
+    """
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs)
+    if n < 1 or n & (n - 1):
+        raise ValueError(
+            f"leaf_mesh wants a power-of-two device count, got {n}")
+    return Mesh(np.array(devs), axis_names=(axis,))
+
+
+def leaf_sharding(mesh: Mesh, *, axis: str = LEAF_AXIS) -> NamedSharding:
+    """Row-sharded ``NamedSharding`` for leaf-order ``(n_leaves, K)`` arrays."""
+    return NamedSharding(mesh, P(axis, None))
 
 
 @dataclasses.dataclass(frozen=True)

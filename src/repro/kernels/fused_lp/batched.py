@@ -157,9 +157,10 @@ def fused_lp_step_batched_kernel(
 
 
 # ----------------------------------------------------- distance-reusing path
-def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
-                   m_ref, s_ref, acc_ref, *, inv_two_sigma_sq: float,
-                   n_valid: int, block_m: int, block_n: int, tile_fn=None):
+def _folded_body(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
+                 m_ref, s_ref, acc_ref, *, inv_two_sigma_sq: float,
+                 n_valid: int, block_m: int, block_n: int, tile_fn=None,
+                 row_base=0):
     i = pl.program_id(0)
     j = pl.program_id(1)
     ncols = pl.num_programs(1)
@@ -174,7 +175,7 @@ def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
     stream_tile_update(rows_ref, cols_ref, y_ref[...], m_ref, s_ref, acc_ref,
                        i, j, inv_two_sigma_sq=inv_two_sigma_sq,
                        n_valid=n_valid, block_m=block_m, block_n=block_n,
-                       tile_fn=tile_fn)
+                       tile_fn=tile_fn, row_base=row_base)
 
     @pl.when(j == ncols - 1)
     def _finish():
@@ -184,28 +185,53 @@ def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
         o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _folded_kernel(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
+                   m_ref, s_ref, acc_ref, **kw):
+    _folded_body(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
+                 m_ref, s_ref, acc_ref, **kw)
+
+
+def _folded_kernel_rb(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, rb_ref,
+                      o_ref, m_ref, s_ref, acc_ref, **kw):
+    # row_base rides as a (1, 1) int32 operand so it may be traced (the
+    # sharded engine derives it from lax.axis_index inside shard_map)
+    _folded_body(rows_ref, cols_ref, y_ref, y0_ref, alpha_ref, o_ref,
+                 m_ref, s_ref, acc_ref, row_base=rb_ref[0, 0], **kw)
+
+
 def _folded_call(xp_rows, xp_cols, yp, y0p, alpha_row, *,
                  inv_two_sigma_sq: float, n_valid: int,
                  block_m: int, block_n: int, interpret: bool,
-                 tile_fn=None) -> jax.Array:
-    """pallas_call on already-padded folded operands; returns padded rows."""
+                 tile_fn=None, row_base=None) -> jax.Array:
+    """pallas_call on already-padded folded operands; returns padded rows.
+
+    ``row_base`` (optional, traced or concrete int32) is the global row id
+    of ``xp_rows``'s first row when the row operand is a stripe of the full
+    point set; ``None`` keeps the classic whole-matrix program untouched.
+    """
     mp, d = xp_rows.shape
     np_ = xp_cols.shape[0]
     k = yp.shape[1]
-    kern = functools.partial(
-        _folded_kernel, inv_two_sigma_sq=inv_two_sigma_sq,
-        n_valid=n_valid, block_m=block_m, block_n=block_n, tile_fn=tile_fn,
-    )
+    kw = dict(inv_two_sigma_sq=inv_two_sigma_sq, n_valid=n_valid,
+              block_m=block_m, block_n=block_n, tile_fn=tile_fn)
+    in_specs = [
+        pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+    ]
+    operands = [xp_rows, xp_cols, yp, y0p, alpha_row]
+    if row_base is None:
+        kern = functools.partial(_folded_kernel, **kw)
+    else:
+        kern = functools.partial(_folded_kernel_rb, **kw)
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (0, 0)))
+        operands.append(jnp.asarray(row_base, jnp.int32).reshape(1, 1))
     return pl.pallas_call(
         kern,
         grid=(mp // block_m, np_ // block_n),
-        in_specs=[
-            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, k), lambda i, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, k), yp.dtype),
         scratch_shapes=[
@@ -214,7 +240,7 @@ def _folded_call(xp_rows, xp_cols, yp, y0p, alpha_row, *,
             pltpu.VMEM((block_m, k), jnp.float32),
         ],
         interpret=interpret,
-    )(xp_rows, xp_cols, yp, y0p, alpha_row)
+    )(*operands)
 
 
 def _alpha_row(alpha, k: int) -> jax.Array:

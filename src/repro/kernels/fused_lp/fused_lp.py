@@ -55,7 +55,8 @@ def tile_config(divergence):
 
 def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
                        i, j, *, inv_two_sigma_sq: float, n_valid: int,
-                       block_m: int, block_n: int, tile_fn=None):
+                       block_m: int, block_n: int, tile_fn=None,
+                       row_base=0):
     """One column-tile step of the online-softmax streaming recurrence.
 
     Shared body of the single-RHS and batched fused-LP kernels: computes
@@ -69,6 +70,13 @@ def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
     divergence tile (see ``core.divergence.Divergence.tile``).  ``None``
     keeps the built-in squared-Euclidean tile — the default Gaussian path,
     byte-for-byte the pre-Bregman kernel.
+
+    ``row_base`` shifts the *global* row identity of this grid's row
+    blocks: the self-transition mask compares ``row_base + i*block_m +
+    local`` against column ids.  A caller whose row operand is a slice of
+    the full point set (the sharded engine hands each device its own row
+    stripe, so every device's ``i`` restarts at 0) passes the stripe's
+    global offset; the default 0 is the classic whole-matrix grid.
     """
     x = rows_ref[...].astype(jnp.float32)          # (bm, d)
     xc = cols_ref[...].astype(jnp.float32)         # (bn, d)
@@ -81,8 +89,8 @@ def stream_tile_update(rows_ref, cols_ref, y_tile, m_ref, s_ref, acc_ref,
         d2 = tile_fn(x, xc)
     logits = -jnp.maximum(d2, 0.0) * inv_two_sigma_sq
 
-    row_ids = i * block_m + jax.lax.broadcasted_iota(jnp.int32,
-                                                     (block_m, block_n), 0)
+    row_ids = row_base + i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, block_n), 0)
     col_ids = j * block_n + jax.lax.broadcasted_iota(jnp.int32,
                                                      (block_m, block_n), 1)
     invalid = (row_ids == col_ids) | (col_ids >= n_valid)

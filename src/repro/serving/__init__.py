@@ -12,6 +12,10 @@ The layers underneath:
   result slabs, the lifecycle every engine implements.
 * :class:`PropagateEngine` — the continuous-batching engine over one
   fitted variational dual tree (the first :class:`Engine` implementation).
+* :class:`ShardedPropagateEngine` — the same engine contract executed
+  SPMD across a device mesh (leaf-order rows sharded, per-iteration
+  matvec collective); bit-identical outputs, discoverable via
+  ``Engine.capabilities()`` (``"sharded"``).
 * :class:`EngineFleet` / :class:`FleetMetricsSnapshot` — the multi-tenant
   front-end: tenant -> fitted tree -> engine routing with weighted
   deficit-round-robin fair queueing.
@@ -30,6 +34,7 @@ package directly.  ``tools/check_api.py`` pins this surface against
 """
 from repro.serving._batching import (DEFAULT_WIDTH_BUCKETS, PropagateRequest)
 from repro.serving._engine import PropagateEngine
+from repro.serving._sharded import ShardedPropagateEngine
 from repro.serving._metrics import MetricsSnapshot
 from repro.serving._propagate import propagate_many
 from repro.serving._queue import DeadlineExceeded, QueueFull
@@ -50,5 +55,6 @@ __all__ = [
     "PropagateRequest",
     "QueueFull",
     "ResultSlab",
+    "ShardedPropagateEngine",
     "propagate_many",
 ]

@@ -368,6 +368,21 @@ class PropagateEngine(Engine):
             self._thread.start()
 
     # ------------------------------------------------- engine-api data halves
+    def capabilities(self) -> frozenset[str]:
+        """See :meth:`Engine.capabilities
+        <repro.serving.engine_api.Engine.capabilities>`.
+
+        The continuous-batching engine always publishes epochs and serves
+        the grf walker backend; ``"preempt"`` is configuration-dependent —
+        segmented dispatch only actually happens under ``policy="edf"``
+        (the one discipline with an urgency signal) with ``segment_iters``
+        set, so only that configuration reports it.
+        """
+        caps = {"publish", "grf"}
+        if self.policy == "edf" and self.segment_iters is not None:
+            caps.add("preempt")
+        return frozenset(caps)
+
     @property
     def fit_params(self) -> FitParams:
         """The fitted tree + its serving identity (immutable, shareable)."""
@@ -414,26 +429,29 @@ class PropagateEngine(Engine):
             b <<= 1
         bbs.append(self.max_batch)
         count = 0
+        caps = self.capabilities()
         for be in (backends or (self.backend,)):
             be = route_backend(be, self.backend, n=self.n)
-            kw = ({"n_walkers": self.n_walkers, "seed": self.grf_seed}
-                  if be == "grf" else {})
+            if be == "grf" and "grf" not in caps:
+                raise ValueError(
+                    f"{type(self).__name__} does not serve backend='grf' "
+                    f"(capabilities: {sorted(caps)})")
             for ni in n_iters:
                 for cb in cbs:
                     for bb in bbs:
                         z = np.zeros((bb, self.n, cb), np.float32)
-                        out = self.vdt.label_propagate(
-                            z, alpha=np.zeros((bb,), np.float32),
-                            n_iters=int(ni), batched=True, backend=be, **kw)
+                        out = self._scan(self.vdt, z,
+                                         np.zeros((bb,), np.float32),
+                                         int(ni), be)
                         jax.block_until_ready(out)
                         count += 1
                         # grf has no resume executable to warm: it always
                         # dispatches monolithically
                         if (self.segment_iters is not None and be != "grf"
                                 and int(ni) > self.segment_iters):
-                            out = self.vdt.label_propagate_resume(
-                                z, z, alpha=np.zeros((bb,), np.float32),
-                                n_iters=1, batched=True, backend=be)
+                            out = self._scan_resume(
+                                self.vdt, z, z, np.zeros((bb,), np.float32),
+                                1, be)
                             jax.block_until_ready(out)
                             count += 1
         return count
@@ -471,6 +489,14 @@ class PropagateEngine(Engine):
                 n = self._epochs[eid].n
             validated = request.validate(n=n, buckets=self.buckets,
                                          default_backend=self.backend)
+            if (validated.backend == "grf"
+                    and "grf" not in self.capabilities()):
+                # capability-gated routing: an engine that cannot serve the
+                # walker estimator rejects grf-tagged traffic at the submit
+                # call site, like every other malformed-request error
+                raise ValueError(
+                    f"{type(self).__name__} does not serve backend='grf' "
+                    f"(capabilities: {sorted(self.capabilities())})")
             now = self._clock()
             with self._state_lock:
                 if self._epoch_id != eid:
@@ -847,6 +873,38 @@ class PropagateEngine(Engine):
             return walkers_for_rtol(request.rtol)
         return self.n_walkers
 
+    # ------------------------------------------------------- device dispatch
+    # The two scan hooks below are the ONLY places the scheduler touches
+    # device math.  Everything above them — queue disciplines, grouping,
+    # staging, segmentation, epoch pinning, metrics — is device-layout
+    # agnostic, so an engine that runs the same eq.-15 walk on different
+    # hardware (the sharded multi-device engine in serving/_sharded.py)
+    # overrides exactly these two methods and inherits the whole scheduler.
+
+    def _scan(self, vdt, stack, alphas, n_iters: int, backend: str, *,
+              n_walkers=None):
+        """One monolithic batched LP dispatch: ``(bb, N, cb)`` in and out.
+
+        ``vdt`` is the pinned epoch's fitted tree (NOT necessarily
+        ``self.vdt`` — entries dispatch against the epoch they were
+        submitted under).  ``alphas`` is the per-request ``(bb,)`` array
+        (padding rows 0); ``n_walkers`` only matters to grf dispatches.
+        """
+        kw = {}
+        if backend == "grf":
+            kw = {"n_walkers": int(n_walkers) if n_walkers is not None
+                  else self.n_walkers, "seed": self.grf_seed}
+        return vdt.label_propagate(stack, alpha=alphas, n_iters=int(n_iters),
+                                   batched=True, backend=backend, **kw)
+
+    def _scan_resume(self, vdt, carry, y0, alphas, n_iters, backend: str):
+        """``n_iters`` more eq.-15 steps from a mid-walk ``(bb, N, cb)``
+        carry — the segmented-dispatch primitive (bit-identical to never
+        having paused; ``n_iters`` may be traced)."""
+        return vdt.label_propagate_resume(carry, y0, alpha=alphas,
+                                          n_iters=n_iters, batched=True,
+                                          backend=backend)
+
     def _propagate_group(self, group: list[QueueEntry], stack: np.ndarray,
                          alphas: np.ndarray, n_iters: int, backend: str,
                          preemptible: bool, vdt=None, n_walkers=None):
@@ -876,16 +934,15 @@ class PropagateEngine(Engine):
         if backend == "grf":
             # always monolithic: the MC series estimator has no exact
             # resume primitive (label_propagate_resume rejects grf)
-            out = vdt.label_propagate(
-                stack, alpha=alphas, n_iters=n_iters, batched=True,
-                backend="grf", n_walkers=n_walkers, seed=self.grf_seed)
+            out = self._scan(vdt, stack, alphas, n_iters, "grf",
+                             n_walkers=n_walkers)
             jax.block_until_ready(out)
             return out, 0
-        if (not preemptible or seg is None or self.policy != "edf"
+        # segment only when this configuration actually preempts — the
+        # capability the engine itself reports, not an attribute probe
+        if (not preemptible or "preempt" not in self.capabilities()
                 or int(n_iters) <= seg):
-            out = vdt.label_propagate(
-                stack, alpha=alphas, n_iters=n_iters, batched=True,
-                backend=backend)
+            out = self._scan(vdt, stack, alphas, n_iters, backend)
             jax.block_until_ready(out)
             return out, 0
         # device-resident seed: urgent dispatches between segments refill
@@ -900,9 +957,8 @@ class PropagateEngine(Engine):
         while rec.iters_done < rec.n_iters:
             k = min(seg, rec.n_iters - rec.iters_done)
             t0 = self._clock()
-            rec.carry = vdt.label_propagate_resume(
-                rec.carry, rec.y0, alpha=rec.alphas, n_iters=k,
-                batched=True, backend=rec.backend)
+            rec.carry = self._scan_resume(vdt, rec.carry, rec.y0,
+                                          rec.alphas, k, rec.backend)
             jax.block_until_ready(rec.carry)
             dt = max(self._clock() - t0, 0.0)
             rec.iters_done += k

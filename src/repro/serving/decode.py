@@ -9,6 +9,11 @@ Cache layouts (all stacked over layers for scan):
                   shared attention block applications.
   audio (enc-dec): decoder self-attn KVCache (L, ...) + precomputed
                   cross-attention K/V from the encoder output.
+
+Deprecated as a serving entry point: the label-propagation names it
+re-exports (``PropagateEngine``, ``PropagateRequest``, ...) moved to the
+blessed :mod:`repro.serving` surface; importing this module emits a
+once-per-process :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
@@ -29,10 +34,16 @@ from repro.models.whisper import encoder_forward
 # pads/buckets variable-width label matrices into batched VDT dispatches,
 # and PropagateEngine serves a live queue of them with continuous batching.
 from repro.serving._batching import PropagateRequest
+from repro.serving._deprecation import warn_once
 from repro.serving._engine import PropagateEngine
 from repro.serving._metrics import MetricsSnapshot
 from repro.serving._propagate import propagate_many
 from repro.serving._queue import DeadlineExceeded, QueueFull
+
+warn_once(
+    "repro.serving.decode",
+    "import the serving names (PropagateEngine, PropagateRequest, "
+    "propagate_many, ...) from repro.serving")
 
 __all__ = ["DecodeState", "init_state", "prefill", "decode_step",
            "DECODE_SLACK", "DeadlineExceeded", "MetricsSnapshot",

@@ -3,18 +3,17 @@
 The engine implementation moved to the private ``repro.serving._engine``
 module when the abstract :mod:`repro.serving.engine_api` contract landed;
 this module re-exports the historical names so existing imports keep
-working, with a :class:`DeprecationWarning` at import time.
+working, with a once-per-process :class:`DeprecationWarning` at import time.
 """
-import warnings
-
 from repro.serving._batching import PropagateRequest
+from repro.serving._deprecation import warn_once
 from repro.serving._engine import PropagateEngine
 from repro.serving._queue import DeadlineExceeded, QueueFull
 
-warnings.warn(
-    "repro.serving.engine is deprecated; import PropagateEngine, "
-    "PropagateRequest, QueueFull, and DeadlineExceeded from repro.serving",
-    DeprecationWarning, stacklevel=2)
+warn_once(
+    "repro.serving.engine",
+    "import PropagateEngine, PropagateRequest, QueueFull, and "
+    "DeadlineExceeded from repro.serving")
 
 __all__ = ["PropagateEngine", "QueueFull", "DeadlineExceeded",
            "PropagateRequest"]

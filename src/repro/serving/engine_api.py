@@ -181,6 +181,33 @@ class Engine(abc.ABC):
     def flush(self) -> int:
         """Serve the backlog present at call time; returns futures resolved."""
 
+    # ----------------------------------------------------- introspection
+    def capabilities(self) -> frozenset[str]:
+        """The optional behaviors this engine instance actually provides.
+
+        Capability introspection is the API's replacement for ``hasattr``
+        probing: layers above an engine (the fleet's ``publish`` routing,
+        preemption-aware load generators, operators' dashboards) ask the
+        engine what it can do instead of guessing from its type or its
+        attribute dict.  The vocabulary:
+
+        * ``"publish"`` — epoch-versioned model swaps (:meth:`publish`
+          honors the atomic-swap contract instead of raising);
+        * ``"preempt"`` — segmented preemptible dispatch: long scans
+          yield at segment boundaries to urgent arrivals, with the
+          carry extractable bit-identically at every boundary;
+        * ``"grf"`` — serves the Monte-Carlo walker backend
+          (``backend="grf"`` requests are accepted);
+        * ``"sharded"`` — dispatch state and label stacks are partitioned
+          across a multi-device mesh (SPMD serving).
+
+        The set reflects this *instance*'s live configuration, not just
+        its class: e.g. an engine only reports ``"preempt"`` when its
+        policy/segmenting configuration actually preempts.  The base
+        implementation promises nothing; concrete engines override.
+        """
+        return frozenset()
+
     # -------------------------------------------------------- streaming
     def publish(self, model: Any, *, patched_points: int = 0,
                 stale_blocks: int = 0) -> int:

@@ -155,16 +155,23 @@ class EngineFleet:
 
     # ---------------------------------------------------------- registration
     def register(self, tenant: str, vdt, *, weight: float = 1.0,
+                 engine_cls: type = PropagateEngine,
                  **engine_kwargs) -> PropagateEngine:
         """Register ``tenant`` served by a new engine over ``vdt``.
 
         ``weight`` is the tenant's fair share (relative to the other
-        tenants' weights).  ``engine_kwargs`` pass through to
-        :class:`~repro.serving.PropagateEngine` (``max_batch``, ``policy``,
-        ``segment_iters``, ...) except ``start``/``clock``, which the fleet
-        pins: the fleet owns the ONLY scheduler, so tenant engines never
-        spawn their own threads, and all timing runs on the fleet clock.
-        Returns the tenant's engine (mainly so callers can ``warmup`` it).
+        tenants' weights).  ``engine_cls`` picks the engine implementation
+        (default :class:`~repro.serving.PropagateEngine`; pass
+        :class:`~repro.serving.ShardedPropagateEngine` to serve this
+        tenant SPMD across the device mesh — routing, fair queueing, and
+        the dispatch group key are engine-agnostic, so mixing sharded and
+        single-device tenants in one fleet needs nothing else).
+        ``engine_kwargs`` pass through to the engine constructor
+        (``max_batch``, ``policy``, ``segment_iters``, ...) except
+        ``start``/``clock``, which the fleet pins: the fleet owns the ONLY
+        scheduler, so tenant engines never spawn their own threads, and
+        all timing runs on the fleet clock.  Returns the tenant's engine
+        (mainly so callers can ``warmup`` it).
         """
         if weight <= 0:
             raise ValueError(
@@ -182,8 +189,8 @@ class EngineFleet:
         # engine construction compiles nothing but does touch the fitted
         # tree; keep it outside the lock so a slow register never blocks
         # the scheduler's tenant-list snapshot
-        engine = PropagateEngine(vdt, start=False, clock=self._clock,
-                                 **engine_kwargs)
+        engine = engine_cls(vdt, start=False, clock=self._clock,
+                            **engine_kwargs)
         with self._lock:
             if self._closed:  # lost a race with shutdown()
                 engine.shutdown(wait=False)
@@ -261,6 +268,12 @@ class EngineFleet:
                 raise ValueError(
                     f"unknown tenant {tenant!r} "
                     f"(registered: {sorted(self._tenants)})")
+        if "publish" not in t.engine.capabilities():
+            raise ValueError(
+                f"tenant {tenant!r} engine "
+                f"({type(t.engine).__name__}) does not advertise the "
+                f"'publish' capability (capabilities: "
+                f"{sorted(t.engine.capabilities())})")
         return t.engine.publish(model, patched_points=patched_points,
                                 stale_blocks=stale_blocks)
 

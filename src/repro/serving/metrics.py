@@ -2,19 +2,18 @@
 
 The metrics implementation moved to the private ``repro.serving._metrics``
 module; this module re-exports the historical names so existing imports
-keep working, with a :class:`DeprecationWarning` at import time.  The
-public snapshot type (``MetricsSnapshot``) is re-exported from
+keep working, with a once-per-process :class:`DeprecationWarning` at
+import time.  The public snapshot type (``MetricsSnapshot``) is re-exported from
 :mod:`repro.serving`; the mutable sink (``EngineMetrics``) is
 engine-internal.
 """
-import warnings
-
+from repro.serving._deprecation import warn_once
 from repro.serving._metrics import (LATENCY_WINDOW, EngineMetrics,
                                     MetricsSnapshot)
 
-warnings.warn(
-    "repro.serving.metrics is deprecated; import MetricsSnapshot from "
-    "repro.serving (the mutable sink lives in repro.serving._metrics)",
-    DeprecationWarning, stacklevel=2)
+warn_once(
+    "repro.serving.metrics",
+    "import MetricsSnapshot from repro.serving (the mutable sink lives in "
+    "repro.serving._metrics)")
 
 __all__ = ["EngineMetrics", "LATENCY_WINDOW", "MetricsSnapshot"]

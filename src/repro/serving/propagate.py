@@ -3,22 +3,20 @@
 The static-batching implementation moved to the private
 ``repro.serving._propagate`` module (and the shared coalescing vocabulary
 to ``repro.serving._batching``); this module re-exports the historical
-names so existing imports keep working, with a :class:`DeprecationWarning`
-at import time.
+names so existing imports keep working, with a once-per-process
+:class:`DeprecationWarning` at import time.
 """
-import warnings
-
 from repro.serving._batching import (ALPHA_SIG_DIGITS, DEFAULT_WIDTH_BUCKETS,
                                      PropagateRequest, bucket_width,
                                      canonical_alpha, group_key, pad_to_width,
                                      stack_group)
+from repro.serving._deprecation import warn_once
 from repro.serving._propagate import propagate_many
 
-warnings.warn(
-    "repro.serving.propagate is deprecated; import PropagateRequest and "
-    "propagate_many from repro.serving (coalescing helpers live in "
-    "repro.serving._batching)",
-    DeprecationWarning, stacklevel=2)
+warn_once(
+    "repro.serving.propagate",
+    "import PropagateRequest and propagate_many from repro.serving "
+    "(coalescing helpers live in repro.serving._batching)")
 
 __all__ = [
     "ALPHA_SIG_DIGITS",

@@ -2,22 +2,20 @@
 
 The queue implementation moved to the private ``repro.serving._queue``
 module; this module re-exports the historical names so existing imports
-keep working, with a :class:`DeprecationWarning` at import time.  The
-public exceptions (``QueueFull``, ``DeadlineExceeded``) are re-exported
+keep working, with a once-per-process :class:`DeprecationWarning` at
+import time.  The public exceptions (``QueueFull``, ``DeadlineExceeded``) are re-exported
 from :mod:`repro.serving`; the queue machinery itself (``RequestQueue``,
 ``QueueEntry``, ``DISCIPLINES``) is engine-internal.
 """
-import warnings
-
+from repro.serving._deprecation import warn_once
 from repro.serving._queue import (DEFAULT_AGING_S, DISCIPLINES,
                                   DeadlineExceeded, QueueEntry, QueueFull,
                                   RequestQueue)
 
-warnings.warn(
-    "repro.serving.queue is deprecated; import QueueFull and "
-    "DeadlineExceeded from repro.serving (queue internals live in "
-    "repro.serving._queue)",
-    DeprecationWarning, stacklevel=2)
+warn_once(
+    "repro.serving.queue",
+    "import QueueFull and DeadlineExceeded from repro.serving (queue "
+    "internals live in repro.serving._queue)")
 
 __all__ = ["DEFAULT_AGING_S", "DISCIPLINES", "DeadlineExceeded", "QueueEntry",
            "QueueFull", "RequestQueue"]

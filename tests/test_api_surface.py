@@ -4,8 +4,11 @@ import json
 import pathlib
 import subprocess
 import sys
+import warnings
 
 import pytest
+
+from repro.serving import _deprecation
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO / "tools"))
@@ -13,7 +16,16 @@ sys.path.insert(0, str(REPO / "tools"))
 import check_api  # noqa: E402  (tools/ is not a package)
 
 SHIMS = ("repro.serving.engine", "repro.serving.propagate",
-         "repro.serving.queue", "repro.serving.metrics")
+         "repro.serving.queue", "repro.serving.metrics",
+         "repro.serving.decode")
+
+
+def _reimport(module, *, reset_ledger):
+    """Fresh import of a shim, optionally resetting its warn-once ledger."""
+    sys.modules.pop(module, None)
+    if reset_ledger:
+        _deprecation._WARNED.discard(module)
+    return importlib.import_module(module)
 
 
 def test_public_api_matches_snapshot():
@@ -48,9 +60,8 @@ def test_every_public_name_importable_from_package():
 def test_deep_module_shims_warn_but_work(module):
     """Historical deep imports still resolve — through a DeprecationWarning
     — and hand back the SAME objects the package exports."""
-    sys.modules.pop(module, None)  # force the import-time warning to re-fire
     with pytest.warns(DeprecationWarning, match="deprecated"):
-        shim = importlib.import_module(module)
+        shim = _reimport(module, reset_ledger=True)
     pkg = importlib.import_module("repro.serving")
     for name in shim.__all__:
         shim_obj = getattr(shim, name)
@@ -59,14 +70,39 @@ def test_deep_module_shims_warn_but_work(module):
             assert shim_obj is pkg_obj, (module, name)
 
 
+@pytest.mark.parametrize("module", SHIMS)
+def test_shim_warns_exactly_once_per_process(module):
+    """The warn-once ledger: a shim's DeprecationWarning fires on the first
+    import of the process and NEVER again — even if the module is evicted
+    from sys.modules and re-imported — until the ledger is reset."""
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        _reimport(module, reset_ledger=True)
+    # second import with the ledger intact must be silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        _reimport(module, reset_ledger=False)
+
+
 def test_shim_objects_are_canonical():
     """No duplicated classes: a PropagateEngine from the old path IS the
     class from the new path (isinstance checks keep working across the
     migration)."""
-    for module in SHIMS:
-        sys.modules.pop(module, None)
+    sys.modules.pop("repro.serving.engine", None)
+    _deprecation._WARNED.discard("repro.serving.engine")
     with pytest.warns(DeprecationWarning):
         from repro.serving.engine import PropagateEngine as old_engine
     from repro.serving import PropagateEngine as new_engine
 
     assert old_engine is new_engine
+
+
+def test_blessed_surface_imports_warning_free():
+    """`import repro.serving` — the ONLY blessed serving import path — must
+    raise no DeprecationWarning in a fresh interpreter.  The shims warn;
+    the package does not."""
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro.serving"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr

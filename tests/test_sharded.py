@@ -1,0 +1,311 @@
+"""Sharded multi-device engine: bit-parity with the single-device engine.
+
+Two test populations:
+
+* **Single-device (D=1 mesh)** — run in tier-1 on the plain CPU device.
+  A 1-device mesh makes every collective a no-op but compiles the SAME
+  shard_map program, blocked row layout, and jit cache as the real thing,
+  so the full code path (both backends, segmented EDF preemption, publish,
+  capability surface, fleet integration, error paths) is exercised on
+  every CI run.
+* **Multi-device grid** — requires >= 2 devices; the CI ``sharded`` leg
+  provides 8 via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+  (set in the workflow env, NOT here: conftest deliberately never forces
+  device counts, so the default leg's smoke tests see the one real CPU
+  device).  Skips cleanly everywhere else.
+
+Parity assertions are ``np.array_equal`` — BIT-exact, not allclose: the
+sharded engine's contract is that sharding is invisible in the output
+(see serving/_sharded.py for how collect_up's pinned summation tree, the
+kernel's ``row_base`` mask, and the blocked row layout buy that).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.vdt import VariationalDualTree
+from repro.serving import (EngineFleet, PropagateEngine, PropagateRequest,
+                           ShardedPropagateEngine)
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices (the CI sharded leg forces 8 host devices)")
+
+ITERS = 8
+
+
+@pytest.fixture(scope="module")
+def fitted128():
+    """(x, vdt) on n=128 gaussian data, enough leaves for an 8-way mesh."""
+    r = np.random.RandomState(5)
+    x = r.randn(128, 8).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 128, refine_batch=64)
+    return x, vdt
+
+
+def _requests(rng, n, count, backend="vdt", n_iters=ITERS):
+    reqs = []
+    for i in range(count):
+        c = [1, 2, 3, 4][i % 4]
+        y0 = (rng.rand(n, c) > 0.8).astype(np.float32)
+        reqs.append(PropagateRequest(
+            y0, alpha=[0.01, 0.05, 0.2][i % 3], n_iters=n_iters,
+            backend=backend))
+    return reqs
+
+
+def _run(engine, reqs):
+    futs = [engine.submit(q) for q in reqs]
+    engine.flush()
+    return [np.asarray(f.result(timeout=30)) for f in futs]
+
+
+def _assert_bit_equal(got, want):
+    for g, w in zip(got, want):
+        assert g.shape == w.shape
+        assert np.array_equal(g, w), float(np.abs(g - w).max())
+
+
+# --------------------------------------------------------- D=1 (tier-1)
+@pytest.mark.parametrize("backend", ["vdt", "exact"])
+def test_single_device_mesh_bit_parity(fitted128, backend):
+    """D=1 sharded engine == plain engine, bit for bit, both backends."""
+    x, vdt = fitted128
+    rng = np.random.RandomState(0)
+    reqs = _requests(rng, x.shape[0], count=5, backend=backend)
+    ref = PropagateEngine(vdt, start=False, max_batch=4)
+    sh = ShardedPropagateEngine(vdt, devices=jax.devices()[:1],
+                                start=False, max_batch=4)
+    try:
+        _assert_bit_equal(_run(sh, reqs), _run(ref, reqs))
+    finally:
+        ref.shutdown()
+        sh.shutdown()
+
+
+@pytest.mark.parametrize("backend", ["vdt", "exact"])
+def test_single_device_segmented_edf_parity(fitted128, backend):
+    """Segmented preemptible dispatch on the sharded engine resumes through
+    the sharded carry and still reproduces the monolithic result exactly
+    (n_iters=9 over segment_iters=2 forces a 1-iteration tail segment)."""
+    x, vdt = fitted128
+    rng = np.random.RandomState(1)
+    reqs = _requests(rng, x.shape[0], count=4, backend=backend, n_iters=9)
+    ref = PropagateEngine(vdt, start=False, max_batch=4)
+    sh = ShardedPropagateEngine(vdt, devices=jax.devices()[:1],
+                                start=False, max_batch=4,
+                                policy="edf", segment_iters=2)
+    try:
+        assert "preempt" in sh.capabilities()
+        _assert_bit_equal(_run(sh, reqs), _run(ref, reqs))
+    finally:
+        ref.shutdown()
+        sh.shutdown()
+
+
+def test_capabilities_surface(fitted128):
+    """Capability introspection: sharded advertises {publish, sharded}
+    (plus preempt only under the EDF/segmented config) and NEVER grf."""
+    _, vdt = fitted128
+    dev = jax.devices()[:1]
+    sh = ShardedPropagateEngine(vdt, devices=dev, start=False)
+    base = PropagateEngine(vdt, start=False)
+    try:
+        assert sh.capabilities() == frozenset({"publish", "sharded"})
+        assert base.capabilities() == frozenset({"publish", "grf"})
+    finally:
+        sh.shutdown()
+        base.shutdown()
+
+
+def test_grf_rejected_at_ctor_and_submit(fitted128):
+    x, vdt = fitted128
+    with pytest.raises(ValueError, match="grf"):
+        ShardedPropagateEngine(vdt, devices=jax.devices()[:1],
+                               backend="grf", start=False)
+    sh = ShardedPropagateEngine(vdt, devices=jax.devices()[:1], start=False)
+    try:
+        with pytest.raises(ValueError, match="grf"):
+            sh.submit(PropagateRequest(
+                np.zeros((x.shape[0], 1), np.float32), backend="grf"))
+    finally:
+        sh.shutdown()
+
+
+def test_warmup_precompiles_sharded_executables(fitted128):
+    _, vdt = fitted128
+    sh = ShardedPropagateEngine(vdt, devices=jax.devices()[:1],
+                                start=False, max_batch=2,
+                                policy="edf", segment_iters=4)
+    try:
+        assert sh.warmup(widths=(2,), n_iters=(ITERS,)) > 0
+    finally:
+        sh.shutdown()
+
+
+def test_publish_serves_new_epoch_single_device():
+    """Publish on the sharded engine: the swapped-in tree serves bit-equal
+    to a fresh engine over the same tree, and the retired epoch's device
+    buffers are dropped from the cache."""
+    from repro.core.streaming import insert_points
+
+    r = np.random.RandomState(11)
+    x = r.randn(96, 6).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 96, refine_batch=48,
+                                  capacity=128)
+    sh = ShardedPropagateEngine(vdt, devices=jax.devices()[:1],
+                                start=False, max_batch=4)
+    try:
+        _run(sh, _requests(np.random.RandomState(2), 96, count=2))
+        up = insert_points(vdt, x[:4] + 0.01)
+        sh.publish(up.vdt, patched_points=up.patched_points)
+        req = PropagateRequest((r.rand(sh.n, 2) > 0.8).astype(np.float32),
+                               alpha=0.05, n_iters=ITERS)
+        got = _run(sh, [req])[0]
+        ref = PropagateEngine(up.vdt, start=False)
+        try:
+            want = _run(ref, [req])[0]
+        finally:
+            ref.shutdown()
+        assert np.array_equal(got, want)
+        assert len(sh._buf_cache) == 1  # old epoch's buffers retired
+    finally:
+        sh.shutdown()
+
+
+def test_fleet_registers_sharded_tenant(fitted128):
+    """engine_cls routes a tenant onto the sharded engine with ZERO other
+    fleet changes; routing/DRR/publish all hold."""
+    x, vdt = fitted128
+    fleet = EngineFleet(start=False)
+    try:
+        eng = fleet.register("shard", vdt,
+                             engine_cls=ShardedPropagateEngine,
+                             devices=jax.devices()[:1], max_batch=4)
+        assert isinstance(eng, ShardedPropagateEngine)
+        reqs = [PropagateRequest(
+            (np.random.RandomState(7).rand(x.shape[0], 2) > 0.8)
+            .astype(np.float32), alpha=0.05, n_iters=ITERS, tenant="shard")]
+        futs = [fleet.submit(q) for q in reqs]
+        fleet.flush()
+        ref = PropagateEngine(vdt, start=False)
+        try:
+            want = _run(ref, reqs)
+        finally:
+            ref.shutdown()
+        _assert_bit_equal([np.asarray(f.result(timeout=30)) for f in futs],
+                          want)
+    finally:
+        fleet.shutdown()
+
+
+def test_fleet_publish_requires_capability(fitted128):
+    """Fleet publish routes on the capability, not on hasattr: an engine
+    that doesn't advertise 'publish' is refused with a clear error."""
+    _, vdt = fitted128
+
+    class _NoPublish(PropagateEngine):
+        def capabilities(self):
+            return super().capabilities() - {"publish"}
+
+    fleet = EngineFleet(start=False)
+    try:
+        fleet.register("fixed", vdt, engine_cls=_NoPublish)
+        with pytest.raises(ValueError, match="publish"):
+            fleet.publish("fixed", vdt)
+    finally:
+        fleet.shutdown()
+
+
+# ------------------------------------------------- multi-device (CI leg)
+@multi_device
+@pytest.mark.parametrize("backend", ["vdt", "exact"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_full_mesh_bit_parity(fitted128, backend, seed):
+    """Full-mesh sharded engine == single-device engine over a mixed
+    width/alpha request stream, bit for bit."""
+    x, vdt = fitted128
+    rng = np.random.RandomState(seed)
+    reqs = _requests(rng, x.shape[0], count=6, backend=backend)
+    ref = PropagateEngine(vdt, start=False, max_batch=4)
+    sh = ShardedPropagateEngine(vdt, start=False, max_batch=4)
+    try:
+        assert sh.n_devices == jax.device_count()
+        _assert_bit_equal(_run(sh, reqs), _run(ref, reqs))
+    finally:
+        ref.shutdown()
+        sh.shutdown()
+
+
+@multi_device
+@pytest.mark.parametrize("backend", ["vdt", "exact"])
+def test_full_mesh_segmented_edf_parity(fitted128, backend):
+    """PR 6's carry guarantee survives sharding: EDF segmented dispatch on
+    the full mesh is bit-identical to the monolithic single-device run."""
+    x, vdt = fitted128
+    rng = np.random.RandomState(3)
+    reqs = _requests(rng, x.shape[0], count=4, backend=backend, n_iters=9)
+    ref = PropagateEngine(vdt, start=False, max_batch=4)
+    sh = ShardedPropagateEngine(vdt, start=False, max_batch=4,
+                                policy="edf", segment_iters=2)
+    try:
+        _assert_bit_equal(_run(sh, reqs), _run(ref, reqs))
+    finally:
+        ref.shutdown()
+        sh.shutdown()
+
+
+@multi_device
+def test_full_mesh_publish_mid_flight():
+    """Queued old-epoch requests keep their bits across a publish; the new
+    epoch serves bit-equal to a fresh engine on the full mesh."""
+    from repro.core.streaming import insert_points
+
+    r = np.random.RandomState(13)
+    x = r.randn(128, 8).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=4 * 128, refine_batch=64,
+                                  capacity=160)
+    rng = np.random.RandomState(4)
+    reqs = _requests(rng, 128, count=2)
+    sh = ShardedPropagateEngine(vdt, start=False, max_batch=4)
+    ref = PropagateEngine(vdt, start=False, max_batch=4)
+    try:
+        pending = [sh.submit(q) for q in reqs]
+        up = insert_points(vdt, x[:4] + 0.01)
+        sh.publish(up.vdt, patched_points=up.patched_points)
+        req2 = PropagateRequest((r.rand(sh.n, 2) > 0.8).astype(np.float32),
+                                alpha=0.05, n_iters=ITERS)
+        f2 = sh.submit(req2)
+        sh.flush()
+        _assert_bit_equal(
+            [np.asarray(f.result(timeout=30)) for f in pending],
+            _run(ref, reqs))
+        ref2 = PropagateEngine(up.vdt, start=False)
+        try:
+            want2 = _run(ref2, [req2])[0]
+        finally:
+            ref2.shutdown()
+        assert np.array_equal(np.asarray(f2.result(timeout=30)), want2)
+    finally:
+        sh.shutdown()
+        ref.shutdown()
+
+
+@multi_device
+def test_more_devices_than_leaves_rejected():
+    r = np.random.RandomState(17)
+    x = r.randn(3, 3).astype(np.float32)
+    vdt = VariationalDualTree.fit(x, max_blocks=12)
+    if jax.device_count() <= int(vdt.tree.n_leaves):
+        pytest.skip("tree too large to trigger the leaf floor here")
+    with pytest.raises(ValueError, match="leaf"):
+        ShardedPropagateEngine(vdt, start=False)
+
+
+@multi_device
+def test_non_power_of_two_mesh_rejected(fitted128):
+    _, vdt = fitted128
+    if jax.device_count() < 4:
+        pytest.skip("needs >=4 devices to select a non-power-of-two subset")
+    with pytest.raises(ValueError, match="power-of-two"):
+        ShardedPropagateEngine(vdt, devices=jax.devices()[:3], start=False)

@@ -89,17 +89,32 @@ def describe_surface() -> dict:
 
 
 def diff_surfaces(expected: dict, actual: dict) -> list[str]:
-    """Human-readable drift list; empty when the surfaces match."""
+    """Human-readable drift list; empty when the surfaces match.
+
+    Every line names the symbol WITH its kind (``class`` / ``function`` /
+    ``exception`` / ``constant``): "removed: QueueFull (exception)" tells
+    a reviewer what broke without opening the snapshot, and a kind
+    transition (a constant becoming a function, say) is reported as such
+    rather than as an opaque JSON mismatch.
+    """
     problems: list[str] = []
     exp, act = expected.get("surface", {}), actual.get("surface", {})
     for name in sorted(set(exp) | set(act)):
         if name not in act:
-            problems.append(f"removed from public API: {name}")
+            kind = exp[name].get("kind", "?")
+            problems.append(f"removed from public API: {name} ({kind})")
         elif name not in exp:
-            problems.append(f"added to public API without snapshot: {name}")
-        elif exp[name] != act[name]:
+            kind = act[name].get("kind", "?")
             problems.append(
-                f"changed: {name}\n  snapshot: {json.dumps(exp[name], sort_keys=True)}"
+                f"added to public API without snapshot: {name} ({kind})")
+        elif exp[name] != act[name]:
+            ekind = exp[name].get("kind", "?")
+            akind = act[name].get("kind", "?")
+            kind = (ekind if ekind == akind
+                    else f"kind changed: {ekind} -> {akind}")
+            problems.append(
+                f"changed: {name} ({kind})"
+                f"\n  snapshot: {json.dumps(exp[name], sort_keys=True)}"
                 f"\n  live:     {json.dumps(act[name], sort_keys=True)}")
     return problems
 
